@@ -1,0 +1,38 @@
+"""Kernel micro-bench (§4.4 supplement): interpret-mode correctness-path
+timing of each Pallas kernel vs its jnp oracle, plus the conv-backend
+comparison (fft vs blockfft vs toeplitz) that drives the §Perf iteration.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters=3):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(rows):
+    from repro.core.blockfft import blockfft_causal_conv
+    from repro.core.fftconv import fft_causal_conv
+    from repro.kernels import ref
+
+    B, L, D = 2, 2048, 64
+    u = jax.random.normal(jax.random.PRNGKey(0), (B, L, D))
+    h = jax.random.normal(jax.random.PRNGKey(1), (D, L)) / L
+    fft_t = _time(jax.jit(fft_causal_conv), u, h)
+    blk_t = _time(jax.jit(blockfft_causal_conv), u, h)
+    rows.append(("kernels/fftconv_L2048", fft_t, "xla_fft"))
+    rows.append(("kernels/blockfft_L2048", blk_t, "matmul_dft"))
+
+    g = jax.random.normal(jax.random.PRNGKey(2), (D,)) * 0.1
+    x = jax.random.normal(jax.random.PRNGKey(3), (B * L, D))
+    rn_t = _time(jax.jit(lambda x, g: ref.rmsnorm(x, g)), x, g)
+    rows.append(("kernels/rmsnorm_ref", rn_t, "oracle"))
+    return rows

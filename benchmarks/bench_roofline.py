@@ -1,0 +1,25 @@
+"""§Roofline table emission: three terms + dominant bottleneck per
+(arch × shape) cell, from the dry-run artifacts (Table/§ of EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from benchmarks.roofline import load_cells, terms
+
+
+def run(rows):
+    cells = load_cells()
+    if not cells:
+        rows.append(("roofline/no_artifacts_yet", 0.0, "run launch.dryrun"))
+        return rows
+    for c in cells:
+        t = terms(c)
+        if t is None:
+            continue
+        name = f"roofline/{c['arch']}__{c['shape']}"
+        derived = (
+            f"c={t['t_compute_s']:.2e};m={t['t_memory_s']:.2e};"
+            f"n={t['t_collective_s']:.2e};dom={t['dominant']};"
+            f"mfu_bound={t['mfu_bound']:.3f}"
+        )
+        rows.append((name, t["ideal_step_s"] * 1e6, derived))
+    return rows

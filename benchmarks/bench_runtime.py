@@ -1,0 +1,52 @@
+"""Figure 4.3 reproduction: runtime of the Hyena operator vs dense
+attention as sequence length grows, locating the crossover.  CPU container:
+absolute times differ from the paper's A100s, but the asymptotic crossover
+(quadratic attention vs L·logL Hyena) is the claim being validated.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import split_params
+
+
+def _time(fn, *args, iters=3):
+    jax.block_until_ready(fn(*args))  # compile + warm-up
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run(rows):
+    from repro.core import HyenaConfig, FilterConfig
+    from repro.core.operator import init_hyena, hyena_operator
+    from repro.models.attention import AttentionConfig, apply_attention, init_attention
+
+    D, B = 64, 1
+    hcfg = HyenaConfig(d_model=D, order=2,
+                       filter=FilterConfig(d_model=D, order=2, ffn_width=32,
+                                           pos_dim=17))
+    hp, _ = split_params(init_hyena(jax.random.PRNGKey(0), hcfg))
+    acfg = AttentionConfig(d_model=D, n_heads=4, n_kv_heads=4, head_dim=16,
+                           chunk_kv=1 << 30)  # dense path
+    ap, _ = split_params(init_attention(jax.random.PRNGKey(1), acfg))
+
+    hy_f = jax.jit(lambda p, u: hyena_operator(p, hcfg, u))
+    at_f = jax.jit(lambda p, u: apply_attention(p, acfg, u))
+
+    crossover = None
+    prev = None
+    for L in [256, 512, 1024, 2048, 4096, 8192]:
+        u = jax.random.normal(jax.random.PRNGKey(2), (B, L, D))
+        t_h = _time(hy_f, hp, u)
+        t_a = _time(at_f, ap, u)
+        rows.append((f"fig4.3/hyena_L{L}", t_h, f"attn_us={t_a:.0f}"))
+        if prev is not None and t_h < t_a and crossover is None:
+            crossover = L
+        prev = (t_h, t_a)
+    rows.append(("fig4.3/crossover_seqlen", 0.0, str(crossover)))
+    return rows

@@ -1,0 +1,37 @@
+"""FLOP models (paper App. A.2) — Table 4.4's accounting, reused by the
+benchmark harness and the roofline report.
+
+GPT per layer (forward, ×2 for mul+add; ×3 for fwd+bwd):
+  attention: qkvo projections 4·D²·L + attention matrix 2·D·L² (non-param)
+  mlp: 2·D·d_ff·L
+Hyena per layer (order N):
+  projections (N+1)·D²·L ; short conv (N+1)·D·L·3 ;
+  FFTConv 5·N·D·L·log2(L) ; output D²·L
+"""
+from __future__ import annotations
+
+import math
+
+
+def gpt_layer_flops(d_model: int, d_ff: int, L: int) -> float:
+    proj = 4 * d_model * d_model * L
+    attn = 2 * d_model * L * L
+    mlp = 2 * d_model * d_ff * L
+    return 2.0 * (proj + attn + mlp)
+
+
+def hyena_layer_flops(d_model: int, d_ff: int, L: int, order: int = 2,
+                      short_len: int = 3) -> float:
+    proj = (order + 1) * d_model * d_model * L
+    short = (order + 1) * d_model * L * short_len
+    fftconv = 5 * order * d_model * L * math.log2(max(L, 2))
+    out = d_model * d_model * L
+    mlp = 2 * d_model * d_ff * L
+    return 2.0 * (proj + short + fftconv + out + mlp)
+
+
+def lm_total_flops(layer_flops: float, n_layers: int, d_model: int,
+                   vocab: int, L: int, train: bool = True) -> float:
+    head = 2.0 * d_model * vocab * L
+    total = layer_flops * n_layers + head
+    return total * 3.0 if train else total  # bwd = 2x fwd

@@ -1,0 +1,95 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run artifacts.
+
+    PYTHONPATH=src:. python -m benchmarks.report [--base artifacts/dryrun_baseline]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from benchmarks.roofline import load_cells, terms
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt(x, digits=2):
+    return f"{x:.{digits}e}" if isinstance(x, float) else str(x)
+
+
+def roofline_table(art_dir: str) -> str:
+    cells = load_cells(art_dir)
+    cells.sort(key=lambda c: (SHAPE_ORDER.index(c["shape"]), c["arch"]))
+    lines = [
+        "| arch | shape | note | compute s | memory s | collective s | dominant "
+        "| MODEL_FLOPS | useful ratio | MFU bound |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        t = terms(c)
+        if t is None:
+            continue
+        note = "hyena-swap" if c.get("hyena_swap") else ""
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {note} "
+            f"| {t['t_compute_s']:.2e} | {t['t_memory_s']:.2e} "
+            f"| {t['t_collective_s']:.2e} | **{t['dominant']}** "
+            f"| {c.get('model_flops', 0):.2e} "
+            f"| {t['useful_flops_ratio'] if t['useful_flops_ratio'] is not None else 0:.2f} "
+            f"| {t['mfu_bound']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def dryrun_table(art_root: str) -> str:
+    lines = [
+        "| mesh | arch | shape | status | compile s | temp bytes/dev | args bytes/dev "
+        "| flops/dev (extrap) | collective bytes/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for mesh in ["pod16x16", "pod2x16x16"]:
+        for f in sorted(glob.glob(os.path.join(art_root, mesh, "*.json"))):
+            c = json.load(open(f))
+            if c.get("status") != "ok":
+                lines.append(f"| {mesh} | {c['arch']} | {c['shape']} | FAILED | | | | | |")
+                continue
+            mem = c["full"]["memory"]
+            src = c.get("extrapolated") or {}
+            fl = src.get("flops") or c["full"]["cost_analysis"].get("flops") or 0
+            coll = sum((src.get("collectives") or c["full"].get("collectives", {})).values())
+            lines.append(
+                f"| {mesh} | {c['arch']} | {c['shape']} | ok "
+                f"| {c['full']['compile_s']:.0f} "
+                f"| {(mem['temp_bytes'] or 0)/1e9:.2f}G "
+                f"| {(mem['argument_bytes'] or 0)/1e9:.2f}G "
+                f"| {fl:.2e} | {coll/1e9:.1f}G |"
+            )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--art", default="artifacts/dryrun")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    doc = []
+    doc.append("### Roofline (single-pod 16×16, optimized)\n")
+    doc.append(roofline_table(os.path.join(args.art, "pod16x16")))
+    base = "artifacts/dryrun_baseline/pod16x16"
+    if os.path.isdir(base):
+        doc.append("\n\n### Roofline (single-pod 16×16, paper-faithful baseline)\n")
+        doc.append(roofline_table(base))
+    doc.append("\n\n### Dry-run compile record (both meshes)\n")
+    doc.append(dryrun_table(args.art))
+    text = "\n".join(doc)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+    else:
+        print(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Three-term roofline model for TPU v5e from dry-run artifacts.
+
+  compute    = FLOPs_per_chip / 197 TFLOP/s (bf16 MXU)
+  memory     = HBM bytes_per_chip / 819 GB/s
+  collective = collective bytes_per_chip / 50 GB/s (ICI per-link)
+
+Artifacts store *per-chip* numbers (the SPMD-partitioned module is the
+per-device program), so term = per_chip / per_chip_rate — algebraically the
+same as the global form global/(chips × rate).  The scan-body undercount is
+corrected by the depth-probe extrapolation recorded per cell (dryrun.py).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+
+def load_cells(art_dir: str = "artifacts/dryrun/pod16x16") -> List[Dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        r = json.load(open(f))
+        if r.get("status") == "ok":
+            cells.append(r)
+    return cells
+
+
+def terms(cell: Dict) -> Optional[Dict]:
+    src = cell.get("extrapolated") or cell.get("full", {})
+    flops = src.get("flops")
+    byt = src.get("bytes_accessed")
+    # depth-probe extrapolation can go non-monotone when the partitioner
+    # picks different strategies at depth 1 vs 2 (seen on recurrentgemma
+    # long_500k) — fall back to the full compile, flagged.
+    probe_invalid = any(
+        v is not None and v < 0
+        for v in [flops, byt, *list((src.get("collectives") or {}).values())]
+    )
+    if flops is None or probe_invalid:
+        ca = cell.get("full", {}).get("cost_analysis", {})
+        flops, byt = ca.get("flops"), ca.get("bytes_accessed")
+        src = cell.get("full", {})
+    coll = src.get("collectives") or cell.get("full", {}).get("collectives", {})
+    coll_bytes = sum(v for v in coll.values() if v)
+    if flops is None:
+        return None
+    t_compute = flops / PEAK_FLOPS
+    t_memory = (byt or 0) / HBM_BW
+    t_coll = coll_bytes / ICI_BW
+    ideal = max(t_compute, t_memory, t_coll, 1e-12)
+    dominant = max(
+        [("compute", t_compute), ("memory", t_memory), ("collective", t_coll)],
+        key=lambda kv: kv[1],
+    )[0]
+    chips = cell.get("chips", 256)
+    model_flops_per_chip = cell.get("model_flops", 0) / chips
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "ideal_step_s": ideal,
+        "dominant": dominant,
+        "useful_flops_ratio": (model_flops_per_chip / flops) if flops else None,
+        "mfu_bound": model_flops_per_chip / (PEAK_FLOPS * ideal),
+        "collective_breakdown": coll,
+    }

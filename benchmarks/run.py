@@ -1,0 +1,55 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper table/figure.
+
+  bench_recall    — Fig 4.1 / Table 4.2 (associative recall, implicit vs
+                    explicit filter parameterization, vocab scaling)
+  bench_lm_flops  — Table 4.4 (GPT vs Hyena total-FLOP accounting)
+  bench_runtime   — Fig 4.3 (operator runtime crossover vs attention)
+  bench_kernels   — §4.4 supplement (conv backend micro-bench)
+  bench_roofline  — §Roofline terms from the multi-pod dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="run a single bench module")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_kernels,
+        bench_lm_flops,
+        bench_recall,
+        bench_roofline,
+        bench_runtime,
+    )
+
+    modules = {
+        "recall": bench_recall,
+        "lm_flops": bench_lm_flops,
+        "runtime": bench_runtime,
+        "kernels": bench_kernels,
+        "roofline": bench_roofline,
+    }
+    if args.only:
+        modules = {args.only: modules[args.only]}
+
+    rows = []
+    print("name,us_per_call,derived")
+    for name, mod in modules.items():
+        try:
+            start = len(rows)
+            mod.run(rows)
+            for r in rows[start:]:
+                print(f"{r[0]},{r[1]:.1f},{r[2]}")
+                sys.stdout.flush()
+        except Exception:
+            print(f"{name}/ERROR,0.0,{traceback.format_exc(limit=1)!r}")
+
+
+if __name__ == "__main__":
+    main()

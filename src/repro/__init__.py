@@ -1,0 +1,8 @@
+"""repro: a production-grade JAX framework reproducing *Hyena Hierarchy*
+(Poli et al., ICML 2023) with multi-pod distribution, Pallas TPU kernels,
+and a composable model zoo.
+"""
+
+__version__ = "1.0.0"
+
+from repro.common.param import Ax, split_params, merge_params  # noqa: F401

@@ -1,0 +1,23 @@
+"""Weight initializers (fp32 at init; compute dtype is a policy concern)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def normal(key, shape, stddev=0.02, dtype=jnp.float32):
+    return stddev * jax.random.normal(key, shape, dtype)
+
+
+def lecun(key, shape, fan_in=None, dtype=jnp.float32):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return jax.random.normal(key, shape, dtype) / np.sqrt(fan_in)
+
+
+def zeros(shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)

@@ -1,0 +1,71 @@
+"""Parameter trees with logical-axis annotations.
+
+Every ``init_*`` function in this codebase returns a pytree whose leaves are
+``Ax(value, axes)`` — an array paired with a tuple of *logical* axis names
+("embed", "heads", "experts", ...).  ``split_params`` separates the tree into
+a plain value tree (fed to jit) and a parallel axes tree (fed to the sharding
+rule engine in ``repro.distributed.sharding``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class Ax:
+    """An array annotated with logical axis names (one per dim)."""
+
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+    def __post_init__(self):
+        if self.axes is not None and np.ndim(self.value) != len(self.axes):
+            raise ValueError(
+                f"Ax: value ndim {np.ndim(self.value)} != axes {self.axes}"
+            )
+
+
+def _ax_flatten(a: "Ax"):
+    return (a.value,), a.axes
+
+
+def _ax_unflatten(axes, children):
+    obj = object.__new__(Ax)
+    obj.value = children[0]
+    obj.axes = axes
+    return obj
+
+
+# Registered as a pytree node so vmap-ed inits can stack layers; the ndim
+# check is skipped on unflatten (stacked values gain leading dims — the
+# sharding rule engine treats extra leading dims as replicated).
+jax.tree_util.register_pytree_node(Ax, _ax_flatten, _ax_unflatten)
+
+
+def _is_ax(x) -> bool:
+    return isinstance(x, Ax)
+
+
+def split_params(tree):
+    """(values, logical_axes) from an Ax-annotated tree."""
+    values = jax.tree_util.tree_map(lambda a: a.value, tree, is_leaf=_is_ax)
+    axes = jax.tree_util.tree_map(lambda a: a.axes, tree, is_leaf=_is_ax)
+    return values, axes
+
+
+def merge_params(values, axes):
+    return jax.tree_util.tree_map(Ax, values, axes)
+
+
+def param_count(values) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree_util.tree_leaves(values)))
+
+
+def param_bytes(values) -> int:
+    return int(
+        sum(np.prod(x.shape) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(values))
+    )

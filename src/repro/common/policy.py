@@ -1,0 +1,35 @@
+"""Mixed-precision policy: fp32 master params, bf16 compute, fp32 reductions.
+
+``cast_compute`` is applied to the parameter tree at the top of each jitted
+step; norms / softmax / FFT run in fp32 internally regardless (handled at the
+op level).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.bfloat16
+    accum_dtype: jnp.dtype = jnp.float32
+
+    def cast_compute(self, tree):
+        def cast(x):
+            if jnp.issubdtype(x.dtype, jnp.floating):
+                return x.astype(self.compute_dtype)
+            return x
+
+        return jax.tree_util.tree_map(cast, tree)
+
+
+FP32 = Policy(compute_dtype=jnp.float32)
+BF16 = Policy()
+
+
+def get_policy(name: str) -> Policy:
+    return {"fp32": FP32, "bf16": BF16}[name]

@@ -1,0 +1,2 @@
+from repro.configs.base import ModelConfig, get_config, register, list_configs  # noqa: F401
+from repro.configs import registry as _registry  # noqa: F401  (populates the registry)

@@ -1,0 +1,135 @@
+"""Model configuration and the architecture registry.
+
+``ModelConfig`` is the single composable description consumed by
+``repro.models.lm``: a repeating ``pattern`` of token mixers + a channel
+mixer (dense MLP or MoE), with per-family extras.  Each assigned
+architecture registers its exact public-literature config in its own module
+under ``repro/configs/`` and is selectable via ``--arch <id>``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    # token-mixer pattern, repeated to n_layers ("attention", "local_attention",
+    # "hyena", "ssd", "rglru").
+    pattern: Tuple[str, ...] = ("attention",)
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    mlp: str = "swiglu"  # swiglu | gelu | squared_relu
+    norm: str = "rmsnorm"
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    local_window: int = 0  # for local_attention layers
+    tie_embeddings: bool = False
+    # --- MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # --- SSM (Mamba-2 SSD)
+    ssm_state: int = 0
+    ssd_head_dim: int = 64
+    ssd_expand: int = 2
+    # --- RG-LRU
+    rnn_width: int = 0
+    # --- Hyena
+    hyena_order: int = 2
+    hyena_filter_width: int = 64
+    hyena_filter_depth: int = 4
+    hyena_pos_dim: int = 65
+    hyena_sine_freq: float = 14.0
+    hyena_decay: tuple = (0.3, 1.5)  # (fast, slow) window decay-rate range
+    hyena_max_support: int = 0  # >0: explicit short-FIR ablation
+    # --- modality frontend stub: first `frontend_len` positions take
+    # precomputed embeddings from input_specs() instead of token embeddings.
+    frontend: Optional[str] = None  # "vit_stub" | "encodec_stub"
+    frontend_len: int = 0
+    # --- citation bookkeeping
+    source: str = ""
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.n_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        # n_layers need not divide the pattern length: the remainder becomes
+        # an unstacked "tail" (e.g. RecurrentGemma: 26 layers, pattern of 3).
+
+    # ---------------------------------------------------------------- helpers
+    @property
+    def attention_free(self) -> bool:
+        return all(m in ("ssd", "rglru", "hyena") for m in self.pattern)
+
+    @property
+    def subquadratic(self) -> bool:
+        """Can run 500K-token decode without a dense global-KV attention."""
+        return all(
+            m in ("ssd", "rglru", "hyena", "local_attention") for m in self.pattern
+        )
+
+    def with_mixer(self, mixer: str) -> "ModelConfig":
+        """The paper's drop-in swap: replace every (local_)attention layer's
+        mixer with `mixer` (e.g. "hyena")."""
+        new_pattern = tuple(
+            mixer if m in ("attention", "local_attention") else m
+            for m in self.pattern
+        )
+        return dataclasses.replace(
+            self, pattern=new_pattern, name=f"{self.name}+{mixer}"
+        )
+
+    def reduced(self) -> "ModelConfig":
+        """Small same-family config for CPU smoke tests."""
+        plen = len(self.pattern)
+        # keep a tail layer if the full config has one (pattern coverage)
+        n_layers = plen + (1 if self.n_layers % plen else 0) if plen > 1 else 2
+        d_model = 64
+        n_heads = max(self.n_heads and 4, 0) or 0
+        n_kv = min(self.n_kv_heads, 2) if self.n_kv_heads else 0
+        return dataclasses.replace(
+            self,
+            name=f"{self.name}-smoke",
+            n_layers=max(n_layers, plen),
+            d_model=d_model,
+            n_heads=4 if self.n_heads else 0,
+            n_kv_heads=n_kv if n_kv else (2 if self.n_heads else 0),
+            head_dim=16 if self.n_heads else 0,
+            d_ff=0 if self.d_ff == 0 else 128,
+            vocab_size=128,
+            n_experts=4 if self.moe else 0,
+            top_k=min(self.top_k, 2) if self.moe else 0,
+            ssm_state=16 if self.ssm_state else 0,
+            ssd_head_dim=16 if self.ssm_state else 64,
+            rnn_width=64 if self.rnn_width else 0,
+            local_window=min(self.local_window, 32) if self.local_window else 0,
+            hyena_filter_width=16,
+            hyena_pos_dim=9,
+            frontend_len=8 if self.frontend else 0,
+        )
+
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch '{name}'; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs():
+    return dict(_REGISTRY)

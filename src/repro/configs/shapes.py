@@ -1,0 +1,70 @@
+"""Assigned input-shape sets and ``input_specs()`` (ShapeDtypeStruct
+stand-ins — weak-type-correct, shardable, no device allocation).
+
+  train_4k     seq 4,096  × global_batch 256   → lowers train_step
+  prefill_32k  seq 32,768 × global_batch 32    → lowers prefill forward
+  decode_32k   seq 32,768 × global_batch 128   → lowers serve_step
+  long_500k    seq 524,288 × global_batch 1    → lowers serve_step
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str  # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def token_specs(cfg: ModelConfig, shape: ShapeCell) -> Dict[str, Any]:
+    """Model *data* inputs for train/prefill as ShapeDtypeStructs."""
+    B, L = shape.batch, shape.seq
+    specs: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((B, L), jnp.int32),
+    }
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((B, L), jnp.int32)
+    if cfg.frontend is not None and cfg.frontend_len:
+        P = min(cfg.frontend_len, L)
+        specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (B, P, cfg.d_model), jnp.bfloat16
+        )
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeCell) -> Dict[str, Any]:
+    """serve_step inputs: one new token + caches sized to shape.seq."""
+    from repro.models import lm
+
+    B = shape.batch
+    caches = jax.eval_shape(
+        lambda: lm.init_caches(cfg, B, shape.seq, dtype=jnp.bfloat16)
+    )
+    return {
+        "token": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "caches": caches,
+    }
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode":
+        return decode_specs(cfg, shape)
+    return token_specs(cfg, shape)

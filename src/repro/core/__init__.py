@@ -1,0 +1,15 @@
+from repro.core.filters import FilterConfig, init_hyena_filter, evaluate_filters  # noqa: F401
+from repro.core.operator import (  # noqa: F401
+    HyenaConfig,
+    init_hyena,
+    hyena_operator,
+    hyena_decode_step,
+    init_decode_cache,
+    precompute_decode_filters,
+)
+from repro.core.fftconv import (  # noqa: F401
+    fft_causal_conv,
+    direct_causal_conv,
+    short_causal_conv,
+    conv_cache_step,
+)

@@ -1,0 +1,88 @@
+"""Block-FFT causal conv: the four-step (Bailey) FFT with the small DFTs
+evaluated as dense matmuls — every FLOP lands on the MXU instead of the
+VPU-bound radix-2 butterfly network.  This is the TPU analogue of
+FlashConv's "block FFT" for tensor cores (H3 paper) and our main
+beyond-paper optimization for Hyena's long convs at training lengths
+(EXPERIMENTS.md §Perf).
+
+Four-step decomposition, N = R·S (x row-major A[r,s] = x[rS+s]):
+
+    X[k1 + k2·R] = Σ_s W_S^{s k2} [ W_N^{s k1} Σ_r A[r,s] W_R^{r k1} ]
+
+  1. DFT_R over rows      — (R×R) matmul, shared by all (batch, channel)
+  2. twiddle W_N^{s·k1}   — elementwise
+  3. DFT_S over columns   — (S×S) matmul
+
+FLOP count 8·N·(R+S) real MACs vs 5·N·log₂N for radix-2 — ~2–4× more
+arithmetic, but at MXU throughput (197 TF/s) instead of VPU (~4 TF/s), a
+large net wall-clock win; the §Perf log quantifies it per shape.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _factor(N: int) -> Tuple[int, int]:
+    R = 1 << math.ceil(math.log2(math.sqrt(N)))
+    while N % R:
+        R *= 2
+    return R, N // R
+
+
+@functools.lru_cache(maxsize=32)
+def _dft_mats(N: int):
+    R, S = _factor(N)
+    r = jnp.arange(R)
+    s = jnp.arange(S)
+    FR = jnp.exp(-2j * jnp.pi * jnp.outer(r, r) / R).astype(jnp.complex64)
+    FS = jnp.exp(-2j * jnp.pi * jnp.outer(s, s) / S).astype(jnp.complex64)
+    TW = jnp.exp(
+        -2j * jnp.pi * jnp.outer(r, s) / N
+    ).astype(jnp.complex64)  # W_N^{k1·s}
+    return R, S, FR, FS, TW
+
+
+def _four_step_fft(x: jax.Array, N: int) -> jax.Array:
+    """x: (B, N, D) real/complex -> spectrum C (B, R, S, D) with
+    X[k1 + k2·R] = C[:, k1, k2, :]."""
+    R, S, FR, FS, TW = _dft_mats(N)
+    B, _, D = x.shape
+    A = x.reshape(B, R, S, D).astype(jnp.complex64)
+    Bm = jnp.einsum("kr,brsd->bksd", FR, A)
+    Bm = Bm * TW[None, :, :, None]
+    return jnp.einsum("bksd,sj->bkjd", Bm, FS)
+
+
+def _four_step_ifft(C: jax.Array, N: int) -> jax.Array:
+    """Inverse of _four_step_fft (same layout). Returns (B, N, D) complex."""
+    R, S, FR, FS, TW = _dft_mats(N)
+    Dm = jnp.einsum("bkjd,sj->bksd", C, jnp.conj(FS))
+    Dm = Dm * jnp.conj(TW)[None, :, :, None]
+    A = jnp.einsum("kr,bksd->brsd", jnp.conj(FR), Dm) / N
+    B = C.shape[0]
+    return A.reshape(B, N, C.shape[-1])
+
+
+def blockfft_causal_conv(
+    u: jax.Array,  # (B, L, D)
+    h: jax.Array,  # (D, L)
+    skip: Optional[jax.Array] = None,
+) -> jax.Array:
+    B, L, D = u.shape
+    N = 2 * L
+    R, S = _factor(N)
+    u32 = u.astype(jnp.float32)
+    up = jnp.pad(u32, ((0, 0), (0, N - L), (0, 0)))
+    hp = jnp.pad(h.astype(jnp.float32).T, ((0, N - L), (0, 0)))[None]  # (1, N, D)
+    U = _four_step_fft(up, N)
+    H = _four_step_fft(hp, N)
+    Y = U * H
+    y = _four_step_ifft(Y, N).real[:, :L, :]
+    if skip is not None:
+        y = y + u32 * skip[None, None, :].astype(jnp.float32)
+    return y.astype(u.dtype)

@@ -1,0 +1,61 @@
+"""Data-controlled matrix form of Hyena (paper §3.2, App. D.1).
+
+``y = H(u) v`` with ``H(u) = D_x^N S_h^N ⋯ D_x^1 S_h^1`` where ``D_x^n =
+diag(x^n)`` and ``S_h^n`` is the lower-triangular (causal) Toeplitz matrix of
+filter ``h^n``.  These utilities materialize the factors for testing
+(recurrence == matrix form), interpretability plots (App. D.1 figures), and
+the H3/GSS special-case checks (Rmk 3.2).  Never used in the fast path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import filters as F
+from repro.core.operator import HyenaConfig, _project
+
+
+def toeplitz(h: jax.Array) -> jax.Array:
+    """Causal (lower-triangular) Toeplitz matrix S_h from a length-L filter.
+
+    h: (..., L) -> (..., L, L) with S[i, j] = h[i-j] for i >= j else 0.
+    """
+    L = h.shape[-1]
+    t = jnp.arange(L)
+    idx = t[:, None] - t[None, :]
+    mask = idx >= 0
+    S = jnp.where(mask, h[..., jnp.clip(idx, 0, L - 1)], 0.0)
+    return S
+
+
+def materialize_H(params, cfg: HyenaConfig, u: jax.Array) -> jax.Array:
+    """H(u): (B, D, L, L) — one data-controlled matrix per channel (the paper
+    notes Hyena has a different matrix per channel since it does not use
+    heads; App. D.1).  Includes the per-order skip term: the effective
+    per-order operator is ``D_x^n (S_h^n + skip_n I)``.
+    """
+    B, L, D = u.shape
+    _, xs = _project(params, cfg, u)
+    h = F.evaluate_filters(params["filters"], cfg.filter, L)  # (N, D, L)
+    skip = F.filter_skip(params["filters"], cfg.filter)  # (N, D)
+    eye = jnp.eye(L, dtype=jnp.float32)
+    H = jnp.broadcast_to(eye, (B, D, L, L))
+    for n in range(cfg.order):
+        S = toeplitz(h[n].astype(jnp.float32))  # (D, L, L)
+        S = S + skip[n][:, None, None] * eye  # (D, L, L)
+        x = xs[n].astype(jnp.float32).transpose(0, 2, 1)  # (B, D, L)
+        # D_x^n (S^n @ H)
+        H = jnp.einsum("bdl,dlm,bdmk->bdlk", x, S, H)
+    return H
+
+
+def apply_H(params, cfg: HyenaConfig, u: jax.Array) -> jax.Array:
+    """y via the materialized matrix (O(L²) — tests only)."""
+    B, L, D = u.shape
+    v, _ = _project(params, cfg, u)
+    H = materialize_H(params, cfg, u)
+    y = jnp.einsum("bdlk,bkd->bld", H, v.astype(jnp.float32)).astype(u.dtype)
+    y = y @ params["out_proj"]["w"].astype(u.dtype)
+    if "b" in params["out_proj"]:
+        y = y + params["out_proj"]["b"].astype(u.dtype)
+    return y

@@ -1,0 +1,140 @@
+"""Mechanistic-design synthetic tasks (paper §4.1, Table 4.1, App. A.1).
+
+  Associative recall   a, 1, b, e, 3, f, b → e
+  Majority             a, g, g, g, e, f, g → g
+  Counting             a, b, b, b, a, c, b → 4
+  ICL of functions     x₀, f(x₀), …, xₙ → f(xₙ)     (linear f, tokenized)
+  Arithmetic           1,3,5, +, 6,8,3 → 8,1,8      (Dₙ-digit addition)
+
+Each generator returns (tokens, labels) int32 arrays with labels = IGNORE
+except at supervised positions, exactly the autoregressive masking the
+paper uses (App. C.1 masks "the first 2·Dₙ−1 elements" for addition).
+
+Difficulty knobs follow App. A.1: sequence length ∈ {1k … 131k} and
+vocabulary size ∈ {10, 20, 30, 40}.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+IGNORE = -1
+
+# token-space layout for symbolic tasks: keys/values share [0, vocab);
+# special query marker = vocab; separator = vocab + 1.
+
+
+def associative_recall(
+    rng: np.random.Generator, *, n: int, seq_len: int, vocab: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Key-value pairs concatenated; final key queries its value.
+    tokens: (n, seq_len), labels: (n, seq_len) IGNORE except last position."""
+    assert seq_len % 2 == 0
+    n_pairs = (seq_len - 2) // 2
+    keys = rng.integers(0, vocab // 2, size=(n, n_pairs))
+    # per-sequence random dictionary: value of key k drawn once per sequence
+    dict_vals = rng.integers(vocab // 2, vocab, size=(n, vocab // 2))
+    vals = np.take_along_axis(dict_vals, keys, axis=1)
+    body = np.empty((n, 2 * n_pairs), dtype=np.int64)
+    body[:, 0::2] = keys
+    body[:, 1::2] = vals
+    q_idx = rng.integers(0, n_pairs, size=n)
+    q_key = keys[np.arange(n), q_idx]
+    q_val = vals[np.arange(n), q_idx]
+    tokens = np.concatenate(
+        [body, q_key[:, None], q_val[:, None]], axis=1
+    ).astype(np.int32)
+    labels = np.full_like(tokens, IGNORE)
+    labels[:, -2] = q_val  # predict the value right after the queried key
+    return tokens, labels
+
+
+def majority(
+    rng: np.random.Generator, *, n: int, seq_len: int, vocab: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    toks = rng.integers(0, vocab, size=(n, seq_len - 1))
+    # bias one symbol to be the clear majority
+    maj = rng.integers(0, vocab, size=n)
+    m = rng.random((n, seq_len - 1)) < 0.5
+    toks = np.where(m, maj[:, None], toks)
+    counts = np.apply_along_axis(np.bincount, 1, toks, minlength=vocab)
+    answer = counts.argmax(axis=1)
+    tokens = np.concatenate([toks, answer[:, None]], axis=1).astype(np.int32)
+    labels = np.full_like(tokens, IGNORE)
+    labels[:, -2] = answer
+    return tokens, labels
+
+
+def counting(
+    rng: np.random.Generator, *, n: int, seq_len: int, vocab: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Count occurrences of the final symbol (count capped at vocab)."""
+    toks = rng.integers(0, vocab, size=(n, seq_len - 1))
+    target = toks[:, -1]
+    counts = (toks == target[:, None]).sum(axis=1)
+    counts = np.minimum(counts, vocab - 1)
+    tokens = np.concatenate([toks, counts[:, None]], axis=1).astype(np.int32)
+    labels = np.full_like(tokens, IGNORE)
+    labels[:, -2] = counts
+    return tokens, labels
+
+
+def icl_linear_functions(
+    rng: np.random.Generator, *, n: int, n_points: int, vocab: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """x₀, w·x₀ mod V, x₁, … — in-context regression of a per-sequence
+    linear map over Z_V (tokenized analogue of the paper's real-valued
+    task)."""
+    w = rng.integers(1, vocab, size=(n, 1))
+    xs = rng.integers(0, vocab, size=(n, n_points))
+    ys = (w * xs) % vocab
+    seq = np.empty((n, 2 * n_points), dtype=np.int64)
+    seq[:, 0::2] = xs
+    seq[:, 1::2] = ys
+    tokens = seq.astype(np.int32)
+    labels = np.full_like(tokens, IGNORE)
+    labels[:, -2] = ys[:, -1]
+    return tokens, labels
+
+
+def addition(
+    rng: np.random.Generator, *, n: int, n_digits: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Dₙ-digit addition (App. C.1): digits of a, digits of b, then the
+    (Dₙ+1)-digit sum; loss masked on the first 2Dₙ−1 positions."""
+    base = 10
+    a = rng.integers(0, base ** n_digits, size=n)
+    b = rng.integers(0, base ** n_digits, size=n)
+    s = a + b
+
+    def digits(x, k):
+        return np.stack(
+            [(x // base ** (k - 1 - i)) % base for i in range(k)], axis=1
+        )
+
+    tokens = np.concatenate(
+        [digits(a, n_digits), digits(b, n_digits), digits(s, n_digits + 1)],
+        axis=1,
+    ).astype(np.int32)
+    labels = np.full_like(tokens, IGNORE)
+    # supervise the sum digits: predict position t+1 from t
+    L = tokens.shape[1]
+    labels[:, 2 * n_digits - 1 : L - 1] = tokens[:, 2 * n_digits : L]
+    return tokens, labels
+
+
+TASKS = {
+    "associative_recall": associative_recall,
+    "majority": majority,
+    "counting": counting,
+    "icl_functions": icl_linear_functions,
+    "addition": addition,
+}
+
+
+def eval_accuracy(logits: np.ndarray, labels: np.ndarray) -> float:
+    """Accuracy over supervised positions (labels != IGNORE)."""
+    mask = labels != IGNORE
+    pred = logits.argmax(-1)
+    return float((pred[mask] == labels[mask]).mean())

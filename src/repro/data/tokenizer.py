@@ -1,0 +1,27 @@
+"""Byte-level tokenizer (vocab 256 + BOS/EOS/PAD). A GPT2-BPE vocabulary is
+not shippable offline; byte-level is lossless and matches the synthetic &
+example corpora in-repo.  Vocab ids: bytes 0..255, BOS=256, EOS=257, PAD=258.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+BOS, EOS, PAD = 256, 257, 258
+VOCAB_SIZE = 259
+
+
+def encode(text: str, add_bos: bool = True, add_eos: bool = False) -> np.ndarray:
+    ids = list(text.encode("utf-8"))
+    if add_bos:
+        ids = [BOS] + ids
+    if add_eos:
+        ids = ids + [EOS]
+    return np.asarray(ids, dtype=np.int32)
+
+
+def decode(ids) -> str:
+    return bytes(int(i) for i in np.asarray(ids) if int(i) < 256).decode(
+        "utf-8", errors="replace"
+    )

@@ -1,0 +1,75 @@
+"""GPipe-style pipeline parallelism over a mesh axis (shard_map +
+collective_permute).
+
+The layer stack is split into S stages (stage s owns groups
+[s·G/S, (s+1)·G/S)); a microbatched forward runs the classic GPipe
+schedule: at tick t, stage s processes microbatch t−s, activations hop
+stage→stage with ``lax.ppermute``.  Bubble fraction = (S−1)/(T+S−1).
+
+This module is deliberately self-contained (a stage function is passed in)
+so it composes with any block stack; tested on 4 host devices against the
+unpipelined reference.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_forward(
+    stage_fn: Callable,  # (stage_params, x) -> x, applied by every stage
+    stage_params,        # pytree with leading stage axis, sharded over `axis`
+    x: jax.Array,        # (T, mb, ...) microbatched input (T microbatches)
+    mesh: Mesh,
+    axis: str = "pipe",
+):
+    """Returns stage_{S-1}(...stage_0(x)) for every microbatch, computed in
+    the GPipe schedule. x lives fully on stage 0's shard at entry."""
+    S = mesh.shape[axis]
+    T = x.shape[0]
+
+    def body(params_blk, x_blk):
+        # params_blk: this stage's params (leading axis 1); x_blk: (T, mb, …)
+        # on stage 0, zeros elsewhere.
+        sid = jax.lax.axis_index(axis)
+        params_local = jax.tree_util.tree_map(lambda a: a[0], params_blk)
+        n_ticks = T + S - 1
+        mb_shape = x_blk.shape[1:]
+
+        def tick(carry, t):
+            buf = carry  # (mb, ...) activation entering this stage this tick
+            # stage 0 injects microbatch t (if t < T); others use buf
+            inject = jnp.where(t < T, 1, 0)
+            mb_idx = jnp.clip(t, 0, T - 1)
+            x_in = jnp.where(
+                (sid == 0) & (inject == 1),
+                x_blk[mb_idx],
+                buf,
+            )
+            y = stage_fn(params_local, x_in)
+            # pass activations downstream: stage s -> s+1 (last wraps to 0,
+            # carrying the finished microbatch back as the output slot)
+            perm = [(i, (i + 1) % S) for i in range(S)]
+            nxt = jax.lax.ppermute(y, axis, perm)
+            # outputs: the wrap-around value at stage 0 at tick t is the
+            # finished microbatch t - (S - 1)
+            return nxt, jnp.where(sid == 0, nxt, jnp.zeros_like(nxt))
+
+        buf0 = jnp.zeros(mb_shape, x_blk.dtype)
+        _, outs = jax.lax.scan(tick, buf0, jnp.arange(n_ticks))
+        # finished microbatch m arrives at tick m + S - 1
+        result = outs[S - 1 :]
+        return result
+
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis), P()),  # params stage-sharded; x replicated
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(stage_params, x)

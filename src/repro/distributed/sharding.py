@@ -1,0 +1,107 @@
+"""Parameter sharding rules: logical axis names → mesh axes.
+
+Every ``init_*`` returns Ax-annotated params; ``param_shardings`` maps the
+logical-axes tree to NamedShardings with:
+
+  - priority lists per logical name (first candidate that divides wins),
+  - no mesh axis reused twice within one tensor's spec,
+  - FSDP: "embed"-family weight dims shard over the data axes when enabled
+    (ZeRO-3 — required to fit 72B/132B optimizer states on 256 chips).
+
+Activation sharding is *not* rule-driven — step functions place explicit
+``ctx.shard`` constraints (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical name -> candidate mesh-axis groups, tried in order.
+# An entry is a tuple of mesh axes meaning "shard this dim over the product".
+TP_RULES: Dict[str, Sequence[Tuple[str, ...]]] = {
+    "mlp": [("model",)],
+    "attn_hidden": [("model",)],
+    "kv_hidden": [("model",)],
+    "vocab": [("model",)],
+    "experts": [("model",)],
+    "expert_ff": [("model",)],
+    "hyena_inner": [("model",)],
+    "hyena_out": [("model",)],
+    "hyena_channels": [("model",)],
+    "rnn_hidden": [("model",)],
+    "ssd_inner": [("model",)],
+    "ssd_state": [],
+    "heads": [("model",)],
+    "embed": [],  # replicated unless fsdp
+}
+FSDP_EMBED = ["embed"]  # logical names that take the data axes under fsdp
+
+
+def resolve_spec(
+    axes: Optional[Tuple[Optional[str], ...]],
+    shape: Tuple[int, ...],
+    mesh: Mesh,
+    *,
+    fsdp: bool = False,
+    data_axes: Tuple[str, ...] = ("data",),
+    extra_leading: int = 0,
+) -> P:
+    """PartitionSpec for one parameter. ``extra_leading`` accounts for
+    stacked-layer leading dims added by scan-style init (replicated)."""
+    if axes is None:
+        return P()
+    rules = dict(TP_RULES)
+    if fsdp:
+        for name in FSDP_EMBED:
+            rules[name] = [tuple(a for a in data_axes if a in mesh.shape)]
+    entries = [None] * extra_leading + list(axes)
+    shape = tuple(shape)
+    out = []
+    used: set = set()
+    for dim, name in zip(shape, entries):
+        choice = None
+        for cand in rules.get(name, []) if name else []:
+            cand = tuple(a for a in cand if a in mesh.shape and a not in used)
+            if not cand:
+                continue
+            size = 1
+            for a in cand:
+                size *= mesh.shape[a]
+            if size > 1 and dim % size == 0:
+                choice = cand if len(cand) > 1 else cand[0]
+                used.update(cand)
+                break
+        out.append(choice)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_shardings(
+    axes_tree: Any,
+    values_tree: Any,
+    mesh: Mesh,
+    *,
+    fsdp: bool = False,
+    data_axes: Tuple[str, ...] = ("data",),
+) -> Any:
+    """Tree of NamedShardings parallel to the params tree.
+
+    Handles scan-stacked parameters: if a value has more dims than its
+    annotation, leading dims are treated as replicated stack dims.
+    """
+
+    def one(ax, val):
+        extra = val.ndim - (len(ax) if ax is not None else 0)
+        spec = resolve_spec(
+            ax, val.shape, mesh, fsdp=fsdp, data_axes=data_axes,
+            extra_leading=max(extra, 0),
+        )
+        return NamedSharding(mesh, spec)
+
+    is_axes_leaf = lambda a: a is None or (
+        isinstance(a, tuple) and all(x is None or isinstance(x, str) for x in a)
+    )
+    return jax.tree_util.tree_map(one, axes_tree, values_tree, is_leaf=is_axes_leaf)

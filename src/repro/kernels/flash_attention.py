@@ -1,0 +1,146 @@
+"""Causal GQA flash attention Pallas TPU kernel (the baseline Transformer's
+hot-spot; paper §4.4 benchmarks Hyena against exactly this operator).
+
+Online-softmax tiling: grid (B, H, q_block, kv_block) with the kv block
+innermost; fp32 VMEM scratch carries (m, l, acc) across kv steps.  Causal
+and sliding-window masks skip fully-masked kv blocks at the grid level
+(pl.when), so wall-clock scales with the *unmasked* area.  GQA is handled in
+the kv index_map (kv head = q head // group) — no materialized head repeat.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, blk_q: int, blk_k: int, causal: bool,
+    window: int | None, q_offset: int, n_k: int, Lk: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # absolute positions: query rows sit at q_offset + iq*blk_q + a
+    q_start = q_offset + iq * blk_q
+    k_start = ik * blk_k
+    # block-level validity: any key in block <= any query position (causal)
+    # and within window
+    valid = True
+    if causal:
+        valid = k_start <= q_start + blk_q - 1
+    if window is not None:
+        valid = jnp.logical_and(valid, k_start + blk_k - 1 > q_start - window)
+
+    @pl.when(valid)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (blk_q, Dh)
+        k = k_ref[0, 0].astype(jnp.float32)  # (blk_k, Dh)
+        v = v_ref[0, 0].astype(jnp.float32)  # (blk_k, Dh)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (blk_q, blk_k)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+        mask = kpos < Lk  # exclude kv padding rows
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]  # (blk_q, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "blk_q", "blk_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # (B, H, Lq, Dh)
+    k: jax.Array,  # (B, Hkv, Lk, Dh)
+    v: jax.Array,  # (B, Hkv, Lk, Dh)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    blk_q: int = 128,
+    blk_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    B, H, Lq, Dh = q.shape
+    Hkv, Lk = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
+    blk_q = min(blk_q, Lq)
+    blk_k = min(blk_k, Lk)
+    pad_q = (-Lq) % blk_q
+    pad_k = (-Lk) % blk_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Lqp, Lkp = q.shape[2], k.shape[2]
+    n_q, n_k = Lqp // blk_q, Lkp // blk_k
+    # decode offset: query row 0 corresponds to absolute position Lk - Lq
+    q_offset = Lk - Lq
+    grid = (B, H, n_q, n_k)
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            scale=scale, blk_q=blk_q, blk_k=blk_k, causal=causal,
+            window=window, q_offset=q_offset, n_k=n_k, Lk=Lk,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_q, Dh), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec(
+                (1, 1, blk_k, Dh), lambda b, h, iq, ik: (b, h // G, ik, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, blk_k, Dh), lambda b, h, iq, ik: (b, h // G, ik, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, blk_q, Dh), lambda b, h, iq, ik: (b, h, iq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    if pad_q:
+        out = out[:, :, :Lq]
+    return out

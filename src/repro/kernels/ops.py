@@ -1,0 +1,51 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Dispatch policy: on TPU the Pallas lowering runs natively; everywhere else
+(this CPU container) kernels execute via ``interpret=True`` so the *same
+kernel body* is validated.  ``use_kernel=False`` (or platform == cpu inside
+jit-of-dryrun lowerings where interpret overhead matters) falls back to the
+pure-jnp oracle in :mod:`repro.kernels.ref` — bit-compatible semantics by
+construction (tested).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import short_conv as _sc
+from repro.kernels import toeplitz_conv as _tc
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def short_conv_gate(u, w, gate=None, *, use_kernel: bool | None = None, **kw):
+    use_kernel = _on_tpu() if use_kernel is None else use_kernel
+    if use_kernel:
+        return _sc.short_conv_gate(u, w, gate, interpret=not _on_tpu(), **kw)
+    return _ref.short_conv_gate(u, w, gate)
+
+
+def toeplitz_conv(u, h, skip=None, *, use_kernel: bool | None = None, **kw):
+    use_kernel = _on_tpu() if use_kernel is None else use_kernel
+    if use_kernel:
+        return _tc.toeplitz_conv(u, h, skip, interpret=not _on_tpu(), **kw)
+    return _ref.toeplitz_conv(u, h, skip, n_chunk_diags=kw.get("n_chunk_diags"))
+
+
+def flash_attention(q, k, v, *, use_kernel: bool | None = None, **kw):
+    use_kernel = _on_tpu() if use_kernel is None else use_kernel
+    if use_kernel:
+        return _fa.flash_attention(q, k, v, interpret=not _on_tpu(), **kw)
+    kw.pop("blk_q", None), kw.pop("blk_k", None)
+    return _ref.flash_attention(q, k, v, **kw)
+
+
+def rmsnorm(x, g, *, use_kernel: bool | None = None, **kw):
+    use_kernel = _on_tpu() if use_kernel is None else use_kernel
+    if use_kernel:
+        return _rn.rmsnorm(x, g, interpret=not _on_tpu(), **kw)
+    return _ref.rmsnorm(x, g, eps=kw.get("eps", 1e-6))

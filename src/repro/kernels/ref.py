@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic specification its kernel is tested against
+(``tests/test_kernels_*`` sweep shapes/dtypes and ``assert_allclose``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def short_conv_gate(
+    u: jax.Array,  # (B, L, D)
+    w: jax.Array,  # (D, K)
+    gate: Optional[jax.Array] = None,  # (B, L, D) elementwise gate
+) -> jax.Array:
+    """y = gate ⊙ causal_depthwise_conv(u, w).  fp32 accumulation."""
+    B, L, D = u.shape
+    K = w.shape[1]
+    u32 = u.astype(jnp.float32)
+    y = jnp.zeros((B, L, D), jnp.float32)
+    for k in range(K):
+        shifted = u32 if k == 0 else jnp.pad(u32, ((0, 0), (k, 0), (0, 0)))[:, :L]
+        y = y + shifted * w[:, k].astype(jnp.float32)[None, None, :]
+    if gate is not None:
+        y = y * gate.astype(jnp.float32)
+    return y.astype(u.dtype)
+
+
+def toeplitz_conv(
+    u: jax.Array,  # (B, L, D)
+    h: jax.Array,  # (D, L) causal filter taps
+    skip: Optional[jax.Array] = None,  # (D,)
+    n_chunk_diags: Optional[int] = None,  # banded support: K block diagonals
+    chunk: int = 128,
+) -> jax.Array:
+    """Causal depthwise long conv; optionally banded to ``n_chunk_diags``
+    *block* diagonals of the Toeplitz operator: entries S[t, t'] with
+    ``t//chunk - t'//chunk >= n_chunk_diags`` are dropped — the exact
+    semantics of the kernel's chunk-diagonal truncation for exp-decay-
+    windowed Hyena filters."""
+    B, L, D = u.shape
+    h = h.astype(jnp.float32)
+    t = jnp.arange(L)
+    idx = t[:, None] - t[None, :]
+    S = jnp.where(idx >= 0, h[:, jnp.clip(idx, 0, L - 1)], 0.0)  # (D, L, L)
+    if n_chunk_diags is not None:
+        blk = t[:, None] // chunk - t[None, :] // chunk
+        S = jnp.where((blk < n_chunk_diags)[None], S, 0.0)
+    y = jnp.einsum("dij,bjd->bid", S, u.astype(jnp.float32))
+    if skip is not None:
+        y = y + u.astype(jnp.float32) * skip.astype(jnp.float32)[None, None, :]
+    return y.astype(u.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, H, Lq, Dh)
+    k: jax.Array,  # (B, Hkv, Lk, Dh)
+    v: jax.Array,  # (B, Hkv, Lk, Dh)
+    causal: bool = True,
+    window: Optional[int] = None,  # local attention window (None = global)
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Reference softmax attention with GQA (H % Hkv == 0), causal and
+    optional sliding-window masking.  fp32 softmax."""
+    B, H, Lq, Dh = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    scale = scale if scale is not None else Dh ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(B, Hkv, G, Lq, Dh)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf)  # (B,Hkv,G,Lq,Lk)
+    Lk = kf.shape[2]
+    # causal offset: query i attends keys <= i + (Lk - Lq)  (decode case)
+    iq = jnp.arange(Lq)[:, None] + (Lk - Lq)
+    ik = jnp.arange(Lk)[None, :]
+    mask = jnp.ones((Lq, Lk), bool)
+    if causal:
+        mask = mask & (ik <= iq)
+    if window is not None:
+        mask = mask & (ik > iq - window)
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(B, H, Lq, Dh).astype(q.dtype)
+
+
+def rmsnorm(x: jax.Array, g: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """y = x / rms(x) * (1 + g); rms over the last dim in fp32."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps) * (1.0 + g.astype(jnp.float32))
+    return y.astype(x.dtype)

@@ -1,0 +1,90 @@
+"""Fused short depthwise causal conv (+ optional gate) Pallas TPU kernel.
+
+This is Algorithm 1 step 2 of the paper (the explicit width-3 FIR applied to
+the (N+1)·D Hyena projections), optionally fused with the element-wise gate
+of the Hyena recurrence — the two VPU-bound elementwise stages collapse into
+one HBM round-trip.
+
+Tiling: grid (B, L/block_l, D/block_d).  The causal halo (K-1 trailing rows
+of the previous L-block) is delivered through a second BlockSpec view of the
+same input with ``index_map = i-1`` (clamped at 0 and masked), avoiding any
+overlapping-block machinery.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _short_conv_kernel(u_ref, uprev_ref, w_ref, g_ref, o_ref, *, K: int, gated: bool):
+    i = pl.program_id(1)  # L-block index
+    u = u_ref[0].astype(jnp.float32)  # (block_l, block_d)
+    halo = uprev_ref[0, -(K - 1):, :].astype(jnp.float32)  # (K-1, block_d)
+    halo = jnp.where(i == 0, 0.0, halo)
+    full = jnp.concatenate([halo, u], axis=0)  # (block_l + K - 1, block_d)
+    w = w_ref[...].astype(jnp.float32)  # (K, block_d)
+    Lb = u.shape[0]
+    y = jnp.zeros_like(u)
+    for k in range(K):
+        # tap k multiplies u shifted back by k: rows [K-1-k : K-1-k+Lb)
+        y = y + full[K - 1 - k : K - 1 - k + Lb, :] * w[k][None, :]
+    if gated:
+        y = y * g_ref[0].astype(jnp.float32)
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_l", "block_d", "interpret")
+)
+def short_conv_gate(
+    u: jax.Array,  # (B, L, D)
+    w: jax.Array,  # (D, K)
+    gate: jax.Array | None = None,  # (B, L, D)
+    *,
+    block_l: int = 512,
+    block_d: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    B, L, D = u.shape
+    K = w.shape[1]
+    block_l = min(block_l, L)
+    block_d = min(block_d, D)
+    pad_l = (-L) % block_l
+    pad_d = (-D) % block_d
+    if pad_l or pad_d:
+        u = jnp.pad(u, ((0, 0), (0, pad_l), (0, pad_d)))
+        if gate is not None:
+            gate = jnp.pad(gate, ((0, 0), (0, pad_l), (0, pad_d)))
+    wT = w.T  # (K, D)
+    if pad_d:
+        wT = jnp.pad(wT, ((0, 0), (0, pad_d)))
+    Lp, Dp = u.shape[1], u.shape[2]
+    gated = gate is not None
+    g_in = gate if gated else jnp.zeros((B, 1, Dp), u.dtype)
+    grid = (B, Lp // block_l, Dp // block_d)
+    out = pl.pallas_call(
+        functools.partial(_short_conv_kernel, K=K, gated=gated),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_l, block_d), lambda b, i, d: (b, i, d)),
+            # previous L-block (halo source); clamped at the first block
+            pl.BlockSpec(
+                (1, block_l, block_d),
+                lambda b, i, d: (b, jnp.maximum(i - 1, 0), d),
+            ),
+            pl.BlockSpec((K, block_d), lambda b, i, d: (0, d)),
+            pl.BlockSpec(
+                (1, block_l if gated else 1, block_d),
+                (lambda b, i, d: (b, i, d)) if gated else (lambda b, i, d: (b, 0, d)),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, block_l, block_d), lambda b, i, d: (b, i, d)),
+        out_shape=jax.ShapeDtypeStruct(u.shape, u.dtype),
+        interpret=interpret,
+    )(u, u, wT, g_in)
+    if pad_l or pad_d:
+        out = out[:, :L, :D]
+    return out

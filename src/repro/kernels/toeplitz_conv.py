@@ -1,0 +1,119 @@
+"""Chunked block-Toeplitz causal long-conv Pallas TPU kernel.
+
+This is the MXU-native adaptation of the paper's fused CUDA FFTConv
+(DESIGN.md §2).  The causal depthwise conv ``y_t = Σ_lag h_lag · u_{t-lag}``
+is chunked into C-sized blocks; the contribution of lag-chunk ``k = i - j``
+to output chunk ``i`` is a per-channel C×C Toeplitz matmul
+
+    y_i[d] += T_k[d] @ u_j[d],     T_k[d][a, b] = h[d][kC + a - b]
+
+evaluated as a channel-batched ``dot_general`` on the MXU.  Hyena filters are
+exponential-decay windowed, so truncating to ``n_chunk_diags`` chunk
+diagonals (banded support) turns the O(L²/C) schedule into O(L·K) while
+keeping every FLOP on the systolic array instead of the VPU-bound FFT.
+
+Causality inside the diagonal block is obtained *structurally*: the filter is
+front-padded with C zeros, so negative lags index into the zero pad — no
+masks in the inner loop.
+
+Grid: (d_block, i_chunk, j_rel) with j_rel (the chunk diagonal) innermost;
+fp32 VMEM scratch accumulator, finalized on the last diagonal.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _toeplitz_kernel(u_ref, ha_ref, hb_ref, ui_ref, skip_ref, o_ref, acc_ref, *, C: int, K: int):
+    r = pl.program_id(2)  # chunk diagonal (j_rel); j = i - r
+    i = pl.program_id(1)
+
+    @pl.when(r == 0)
+    def _init():
+        ui = ui_ref[...].astype(jnp.float32)  # (B, C, blk_d), u chunk i
+        skip = skip_ref[0].astype(jnp.float32)  # (blk_d,)
+        acc_ref[...] = ui.transpose(2, 1, 0) * skip[:, None, None]
+
+    @pl.when(r <= i)
+    def _accumulate():
+        taps = jnp.concatenate(
+            [ha_ref[...], hb_ref[...]], axis=1
+        ).astype(jnp.float32)  # (blk_d, 2C); padded coords kC .. kC+2C-1
+        a = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+        b = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+        idx = C + a - b  # local tap index in [1, 2C-1]
+        T = jnp.take(taps, idx, axis=1)  # (blk_d, C, C)
+        u = u_ref[...].astype(jnp.float32)  # (B, C, blk_d), u chunk j
+        ut = u.transpose(2, 1, 0)  # (blk_d, C, B)
+        acc_ref[...] += jax.lax.dot_general(
+            T, ut, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(r == K - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...].transpose(2, 1, 0).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("chunk", "block_d", "n_chunk_diags", "interpret"),
+)
+def toeplitz_conv(
+    u: jax.Array,  # (B, L, D)
+    h: jax.Array,  # (D, L)
+    skip: jax.Array | None = None,  # (D,)
+    *,
+    chunk: int = 128,
+    block_d: int = 128,
+    n_chunk_diags: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    B, L, D = u.shape
+    C = min(chunk, L)
+    pad_l = (-L) % C
+    block_d = min(block_d, D)
+    pad_d = (-D) % block_d
+    if pad_l or pad_d:
+        u = jnp.pad(u, ((0, 0), (0, pad_l), (0, pad_d)))
+        h = jnp.pad(h, ((0, pad_d), (0, pad_l)))
+    if skip is None:
+        skip = jnp.zeros((h.shape[0],), jnp.float32)
+    elif pad_d:
+        skip = jnp.pad(skip, (0, pad_d))
+    Lp, Dp = u.shape[1], u.shape[2]
+    n_chunks = Lp // C
+    K = n_chunks if n_chunk_diags is None else min(n_chunk_diags, n_chunks)
+    # front-pad C zeros => negative lags hit zeros (structural causality);
+    # the last diagonal's high block needs one extra C of zeros at the end.
+    hpad = jnp.pad(h, ((0, 0), (C, C)))  # (Dp, Lp + 2C)
+    grid = (Dp // block_d, n_chunks, K)
+    out = pl.pallas_call(
+        functools.partial(_toeplitz_kernel, C=C, K=K),
+        grid=grid,
+        in_specs=[
+            # u chunk j = i - r (clamped; masked when r > i)
+            pl.BlockSpec(
+                (B, C, block_d),
+                lambda d, i, r: (0, jnp.maximum(i - r, 0), d),
+            ),
+            # filter window low/high blocks for lag-chunk k = r
+            pl.BlockSpec((block_d, C), lambda d, i, r: (d, r)),
+            pl.BlockSpec((block_d, C), lambda d, i, r: (d, r + 1)),
+            # u chunk i (skip term, read at r == 0)
+            pl.BlockSpec((B, C, block_d), lambda d, i, r: (0, i, d)),
+            pl.BlockSpec((1, block_d), lambda d, i, r: (0, d)),
+        ],
+        out_specs=pl.BlockSpec((B, C, block_d), lambda d, i, r: (0, i, d)),
+        out_shape=jax.ShapeDtypeStruct(u.shape, u.dtype),
+        scratch_shapes=[pltpu.VMEM((block_d, C, B), jnp.float32)],
+        interpret=interpret,
+    )(u, hpad, hpad, u, skip.reshape(1, -1))
+    if pad_l or pad_d:
+        out = out[:, :L, :D]
+    return out

@@ -1,0 +1,22 @@
+"""Production meshes. Defined as functions (never module-level constants)
+so importing this module never touches jax device state.
+
+Single pod: 16×16 = 256 chips (TPU v5e pod), axes ("data", "model").
+Multi-pod:  2×16×16 = 512 chips, axes ("pod", "data", "model") — the "pod"
+axis carries data parallelism across the inter-pod (DCN/ICI) links; batch
+shards over ("pod", "data") via the 'data' alias in repro.distributed.ctx.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 4):
+    """Small mesh for in-process distributed tests (host devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

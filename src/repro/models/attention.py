@@ -1,0 +1,235 @@
+"""GQA/MHA attention mixer: RoPE, optional QKV bias, sliding window,
+memory-bounded chunked online-softmax (a pure-XLA flash formulation used for
+distributed lowering; the Pallas kernel in repro.kernels is the TPU-native
+single-chip version), and KV-cache decode.
+
+Activation sharding (under a mesh): batch → data; queries → model (context
+parallelism) for long sequences; KV replicated across model (each device
+scans the full key space for its query shard).  See DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import Ax
+from repro.distributed.ctx import shard
+from repro.models.layers import apply_rope, dense, init_dense
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    window: Optional[int] = None  # sliding-window (local) attention
+    chunk_q: int = 512
+    chunk_kv: int = 1024
+
+
+def init_attention(key, cfg: AttentionConfig) -> Dict[str, Any]:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    D, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "q": init_dense(kq, D, H * Dh, ("embed", "attn_hidden"), bias=cfg.qkv_bias),
+        "k": init_dense(kk, D, Hkv * Dh, ("embed", "kv_hidden"), bias=cfg.qkv_bias),
+        "v": init_dense(kv, D, Hkv * Dh, ("embed", "kv_hidden"), bias=cfg.qkv_bias),
+        "o": init_dense(ko, H * Dh, D, ("attn_hidden", "embed")),
+    }
+
+
+def _dense_attention(q, k, v, *, causal, window, q_offset):
+    """(B, Lq, H, Dh) x (B, Lk, Hkv, Dh) — small-L direct path."""
+    B, Lq, H, Dh = q.shape
+    Lk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Lq, Hkv, G, Dh).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(Dh)
+    iq = jnp.arange(Lq)[:, None] + q_offset
+    ik = jnp.arange(Lk)[None, :]
+    mask = jnp.ones((Lq, Lk), bool)
+    if causal:
+        mask = mask & (ik <= iq)
+    if window is not None:
+        mask = mask & (ik > iq - window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Lq, H, Dh).astype(q.dtype)
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, Lq, H, Dh)
+    k: jax.Array,  # (B, Lk, Hkv, Dh)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    chunk_kv: int = 1024,
+) -> jax.Array:
+    """Online-softmax scan over KV chunks: peak memory O(Lq · chunk_kv)
+    instead of O(Lq · Lk).  fp32 accumulators."""
+    B, Lq, H, Dh = q.shape
+    Lk, Hkv = k.shape[1], k.shape[2]
+    if Lk <= chunk_kv:
+        return _dense_attention(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    G = H // Hkv
+    pad = (-Lk) % chunk_kv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = k.shape[1] // chunk_kv
+    ks = k.reshape(B, n_chunks, chunk_kv, Hkv, Dh).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, n_chunks, chunk_kv, Hkv, Dh).transpose(1, 0, 2, 3, 4)
+    qg = (q / math.sqrt(Dh)).reshape(B, Lq, Hkv, G, Dh)
+    iq = jnp.arange(Lq) + q_offset  # absolute query positions
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        idx, kc, vc = inputs  # (B, C, Hkv, Dh)
+        C = kc.shape[1]
+        s = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), kc.astype(jnp.float32)
+        )
+        ik = idx * chunk_kv + jnp.arange(C)
+        mask = (ik[None, :] < Lk)
+        if causal:
+            mask = mask & (ik[None, :] <= iq[:, None])
+        if window is not None:
+            mask = mask & (ik[None, :] > iq[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32)
+        )
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hkv, G, Lq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Lq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Lq, Dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.arange(n_chunks), ks, vs)
+    )
+    l = jnp.where(l == 0.0, 1.0, l)
+    o = (acc / l[..., None]).transpose(0, 3, 1, 2, 4).reshape(B, Lq, H, Dh)
+    return o.astype(q.dtype)
+
+
+def apply_attention(
+    params, cfg: AttentionConfig, x: jax.Array, *, pos_offset: int = 0
+) -> jax.Array:
+    """Full-sequence forward (training / prefill). x: (B, L, D)."""
+    B, L, D = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = dense(params["q"], x).reshape(B, L, H, Dh)
+    k = dense(params["k"], x).reshape(B, L, Hkv, Dh)
+    v = dense(params["v"], x).reshape(B, L, Hkv, Dh)
+    pos = jnp.arange(L) + pos_offset
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    # context parallelism: queries sharded over model axis, KV replicated
+    q = shard(q, "data", "model", None, None)
+    k = shard(k, "data", None, None, None)
+    v = shard(v, "data", None, None, None)
+    o = chunked_attention(
+        q, k, v, causal=True, window=cfg.window, q_offset=pos_offset,
+        chunk_kv=cfg.chunk_kv,
+    )
+    o = shard(o, "data", "model", None, None)
+    return dense(params["o"], o.reshape(B, L, H * Dh))
+
+
+# ------------------------------------------------------------------ decode
+
+def attention_prefill(
+    params, cfg: AttentionConfig, x: jax.Array, max_len: int, dtype=jnp.bfloat16,
+    *, pos_offset: int = 0,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Full-sequence forward that also fills the decode cache."""
+    B, L, D = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = dense(params["q"], x).reshape(B, L, H, Dh)
+    k = dense(params["k"], x).reshape(B, L, Hkv, Dh)
+    v = dense(params["v"], x).reshape(B, L, Hkv, Dh)
+    pos = jnp.arange(L) + pos_offset
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    o = chunked_attention(
+        q, k, v, causal=True, window=cfg.window, q_offset=pos_offset,
+        chunk_kv=cfg.chunk_kv,
+    )
+    y = dense(params["o"], o.reshape(B, L, H * Dh))
+    cache = init_kv_cache(cfg, B, max_len, dtype)
+    size = cache["k"].shape[1]
+    if cfg.window is None:
+        ck = cache["k"].at[:, :L].set(k.astype(dtype))
+        cv = cache["v"].at[:, :L].set(v.astype(dtype))
+    else:
+        # ring buffer: token j lives at slot j % size; keep the last `size`
+        n = min(L, size)
+        slots = (jnp.arange(L - n, L)) % size
+        ck = cache["k"].at[:, slots].set(k[:, L - n :].astype(dtype))
+        cv = cache["v"].at[:, slots].set(v[:, L - n :].astype(dtype))
+    return y, {"k": ck, "v": cv, "t": jnp.asarray(L, jnp.int32)}
+
+
+def init_kv_cache(cfg: AttentionConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    size = max_len if cfg.window is None else min(cfg.window, max_len)
+    return {
+        "k": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def attention_decode_step(
+    params, cfg: AttentionConfig, x_t: jax.Array, cache: Dict[str, Any]
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One token. x_t: (B, D). Sliding-window caches are rolling buffers of
+    size `window`; global caches are length `max_len` with a write cursor."""
+    B, D = x_t.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    t = cache["t"]
+    q = dense(params["q"], x_t).reshape(B, 1, H, Dh)
+    k = dense(params["k"], x_t).reshape(B, 1, Hkv, Dh)
+    v = dense(params["v"], x_t).reshape(B, 1, Hkv, Dh)
+    pos = t[None].astype(jnp.int32)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    size = cache["k"].shape[1]
+    if cfg.window is None:
+        slot = t % size
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        valid = jnp.arange(size) <= t
+    else:
+        # rolling ring buffer for sliding window
+        slot = t % size
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        ages = (t - jnp.arange(size)) % size  # 0 = newest
+        valid = (jnp.arange(size) <= t) & (ages < cfg.window)
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, Dh).astype(jnp.float32) / math.sqrt(Dh)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, ck.astype(jnp.float32))
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, cv.astype(jnp.float32))
+    o = o.reshape(B, H * Dh).astype(x_t.dtype)
+    y = dense(params["o"], o)
+    return y, {"k": ck, "v": cv, "t": t + 1}

@@ -1,0 +1,302 @@
+"""Full language model: embedding → scan-stacked block groups → norm →
+logits, plus the canonical ``train_step``-facing loss and the decode step.
+
+Depth is executed as ``lax.scan`` over ``n_groups`` stacked parameter
+groups (HLO size is depth-independent — required to compile 80-layer 72B
+configs quickly) with per-group ``jax.checkpoint`` (remat) during training.
+
+Modality frontends (VLM/audio archs) are stubs per the assignment: the
+first ``frontend_len`` positions take precomputed patch/frame embeddings
+supplied by ``input_specs()`` instead of token embeddings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import Ax
+from repro.configs.base import ModelConfig
+from repro.distributed.ctx import shard
+from repro.models import blocks as B
+from repro.models.layers import apply_norm, embed, init_embedding, init_norm, unembed
+
+IGNORE = -1  # label id excluded from the loss
+
+
+def tail_mixers(cfg: ModelConfig) -> Tuple[str, ...]:
+    return cfg.pattern[: cfg.n_layers % len(cfg.pattern)]
+
+
+def init_lm(key, cfg: ModelConfig) -> Dict[str, Any]:
+    plen = len(cfg.pattern)
+    n_groups = cfg.n_layers // plen
+    k_emb, k_head, k_tail, *k_groups = jax.random.split(key, 3 + plen)
+    params: Dict[str, Any] = {
+        "embed": init_embedding(k_emb, cfg.vocab_size, cfg.d_model),
+        "final_norm": init_norm(cfg.d_model, cfg.norm),
+        "groups": [],
+    }
+    for p, mixer in enumerate(cfg.pattern):
+        keys = jax.random.split(k_groups[p], n_groups)
+        stacked = jax.vmap(lambda k: B.init_block(k, cfg, mixer))(keys)
+        params["groups"].append(stacked)
+    tails = tail_mixers(cfg)
+    if tails:
+        params["tail"] = [
+            B.init_block(jax.random.fold_in(k_tail, i), cfg, m)
+            for i, m in enumerate(tails)
+        ]
+    if not cfg.tie_embeddings:
+        import math
+
+        params["head"] = {
+            "w": Ax(
+                jax.random.normal(k_head, (cfg.d_model, cfg.vocab_size), jnp.float32)
+                / math.sqrt(cfg.d_model),
+                ("embed", "vocab"),
+            )
+        }
+    return params
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, L) int32
+    frontend_embeds: Optional[jax.Array] = None,  # (B, P, D)
+    *,
+    pos_offset: int = 0,
+    remat: bool = False,
+    conv_backend: Optional[str] = None,
+    compute_dtype=jnp.bfloat16,
+    unroll: bool = False,  # python loop instead of scan (dry-run cost probes)
+    remat_policy: str = "nothing",  # nothing | dots | dots_no_batch
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Returns (logits (B, L, V), aux losses)."""
+    tokens = shard(tokens, "data", None)
+    x = embed(params["embed"], tokens, dtype=compute_dtype)
+    if frontend_embeds is not None and cfg.frontend_len:
+        P = frontend_embeds.shape[1]
+        x = jax.lax.dynamic_update_slice(
+            x, frontend_embeds.astype(x.dtype), (0, 0, 0)
+        )
+    x = shard(x, "data", None, None)
+    plen = len(cfg.pattern)
+
+    def group_body(x, group_params):
+        # residual stream sequence-sharded over 'model' between layers
+        # (Megatron-SP): the scan carry (remat save point) is 1/TP the size
+        # — required to fit 80-layer remat at 16 rows × 4K tokens per chip.
+        x = shard(x, "data", "model", None)
+        aux_sum = jnp.zeros((2,), jnp.float32)
+        for p, mixer in enumerate(cfg.pattern):
+            x, aux = B.apply_block(
+                group_params[p], cfg, mixer, x, pos_offset=pos_offset,
+                conv_backend=conv_backend,
+            )
+            if aux:
+                aux_sum = aux_sum + jnp.stack(
+                    [aux["moe_load_balance"], aux["moe_z_loss"]]
+                )
+        x = shard(x, "data", "model", None)
+        return x, aux_sum
+
+    body = group_body
+    if remat:
+        policy = {
+            "nothing": jax.checkpoint_policies.nothing_saveable,
+            "dots": jax.checkpoint_policies.checkpoint_dots,
+            "dots_no_batch": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        }[remat_policy]
+        body = jax.checkpoint(group_body, policy=policy)
+    if unroll:
+        aux_list = []
+        n_groups = cfg.n_layers // len(cfg.pattern)
+        for g in range(n_groups):
+            gp = jax.tree_util.tree_map(lambda a: a[g], tuple(params["groups"]))
+            x, a = body(x, gp)
+            aux_list.append(a)
+        aux_stack = jnp.stack(aux_list) if aux_list else jnp.zeros((1, 2))
+    else:
+        x, aux_stack = jax.lax.scan(
+            lambda carry, gp: body(carry, gp), x, tuple(params["groups"])
+        )
+    aux = {
+        "moe_load_balance": jnp.sum(aux_stack[:, 0]),
+        "moe_z_loss": jnp.sum(aux_stack[:, 1]),
+    }
+    for i, mixer in enumerate(tail_mixers(cfg)):
+        x, taux = B.apply_block(
+            params["tail"][i], cfg, mixer, x, pos_offset=pos_offset,
+            conv_backend=conv_backend,
+        )
+        for k, v in taux.items():
+            aux[k] = aux[k] + v
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = x @ params["head"]["w"].astype(x.dtype)
+    # sequence-sharded logits: full-vocab rows live on one chip, so the loss
+    # never materializes a vocab-sharded softmax nor a full (B, L, V) fp32.
+    logits = shard(logits, "data", "model", None)
+    return logits, aux
+
+
+def loss_fn(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, L)
+    labels: jax.Array,  # (B, L), IGNORE = masked
+    frontend_embeds: Optional[jax.Array] = None,
+    *,
+    remat: bool = True,
+    moe_aux_weight: float = 0.01,
+    z_loss_weight: float = 1e-4,
+    conv_backend: Optional[str] = None,
+    compute_dtype=jnp.bfloat16,
+    unroll: bool = False,
+    remat_policy: str = "nothing",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = forward(
+        params, cfg, tokens, frontend_embeds, remat=remat,
+        conv_backend=conv_backend, compute_dtype=compute_dtype, unroll=unroll,
+        remat_policy=remat_policy,
+    )
+    logits = logits.astype(jnp.float32)
+    mask = (labels != IGNORE).astype(jnp.float32)
+    safe_labels = jnp.where(labels == IGNORE, 0, labels)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe_labels[..., None], axis=-1)[..., 0]
+    nll = (logz - ll) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll) / denom
+    zl = jnp.sum(jnp.square(logz) * mask) / denom
+    total = loss + z_loss_weight * zl
+    if cfg.moe:
+        total = total + moe_aux_weight * (
+            aux["moe_load_balance"] + aux["moe_z_loss"]
+        )
+    metrics = {
+        "loss": loss,
+        "z_loss": zl,
+        "total_loss": total,
+        "tokens": jnp.sum(mask),
+        **aux,
+    }
+    return total, metrics
+
+
+# ----------------------------------------------------------------- decode
+
+def prefill(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, L) prompt
+    max_len: int,
+    frontend_embeds: Optional[jax.Array] = None,
+    dtype=jnp.bfloat16,
+    compute_dtype=None,
+) -> Tuple[jax.Array, Any]:
+    """Prompt forward pass returning (logits (B, L, V), populated caches).
+    compute_dtype defaults to the cache dtype."""
+    compute_dtype = compute_dtype or dtype
+    x = embed(params["embed"], tokens, dtype=compute_dtype)
+    if frontend_embeds is not None and cfg.frontend_len:
+        x = jax.lax.dynamic_update_slice(
+            x, frontend_embeds.astype(x.dtype), (0, 0, 0)
+        )
+
+    def group_body(x, group_params):
+        caches = []
+        for p, mixer in enumerate(cfg.pattern):
+            x, c = B.block_prefill(group_params[p], cfg, mixer, x, max_len, dtype)
+            caches.append(c)
+        return x, tuple(caches)
+
+    x, group_caches = jax.lax.scan(group_body, x, tuple(params["groups"]))
+    caches = {"groups": list(group_caches)}
+    tails = tail_mixers(cfg)
+    if tails:
+        tail_caches = []
+        for i, mixer in enumerate(tails):
+            x, c = B.block_prefill(params["tail"][i], cfg, mixer, x, max_len, dtype)
+            tail_caches.append(c)
+        caches["tail"] = tail_caches
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = x @ params["head"]["w"].astype(x.dtype)
+    return logits.astype(jnp.float32), caches
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    plen = len(cfg.pattern)
+    n_groups = cfg.n_layers // plen
+    groups = []
+    for mixer in cfg.pattern:
+        one = B.init_block_cache(cfg, mixer, batch, max_len, dtype)
+        stacked = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((n_groups,) + a.shape, a.dtype), one
+        )
+        groups.append(stacked)
+    caches = {"groups": groups}
+    tails = tail_mixers(cfg)
+    if tails:
+        caches["tail"] = [
+            B.init_block_cache(cfg, m, batch, max_len, dtype) for m in tails
+        ]
+    return caches
+
+
+def decode_step(
+    params, cfg: ModelConfig, token_t: jax.Array, caches,
+    compute_dtype=jnp.bfloat16, unroll: bool = False,
+) -> Tuple[jax.Array, Any]:
+    """One decode step: token_t (B,) int32 -> (logits (B, V), new caches)."""
+    x = embed(params["embed"], token_t[:, None], dtype=compute_dtype)[:, 0]  # (B, D)
+    x = shard(x, "data", None)
+
+    def group_body(x, xs):
+        group_params, cache = xs
+        new_caches = []
+        for p, mixer in enumerate(cfg.pattern):
+            x, c = B.block_decode(group_params[p], cfg, mixer, x, cache[p])
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    if unroll:
+        n_groups = cfg.n_layers // len(cfg.pattern)
+        outs = []
+        for g in range(n_groups):
+            take = lambda t: jax.tree_util.tree_map(lambda a: a[g], t)
+            x, cs = group_body(
+                x, (take(tuple(params["groups"])), take(tuple(caches["groups"])))
+            )
+            outs.append(cs)
+        new_groups = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *outs
+        ) if outs else ()
+    else:
+        x, new_groups = jax.lax.scan(
+            group_body, x, (tuple(params["groups"]), tuple(caches["groups"]))
+        )
+    out_caches = {"groups": list(new_groups)}
+    tails = tail_mixers(cfg)
+    if tails:
+        new_tail = []
+        for i, mixer in enumerate(tails):
+            x, c = B.block_decode(params["tail"][i], cfg, mixer, x, caches["tail"][i])
+            new_tail.append(c)
+        out_caches["tail"] = new_tail
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = x @ params["head"]["w"].astype(x.dtype)
+    logits = shard(logits, "data", "model")
+    return logits.astype(jnp.float32), out_caches

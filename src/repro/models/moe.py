@@ -1,0 +1,129 @@
+"""Top-k token-choice MoE channel mixer (Switch/GShard-family, as used by
+DBRX 16e/top-4 and Granite 40e/top-8).
+
+Dispatch is rank-based (argsort-free): per-(token, expert) position =
+cumulative count of earlier tokens routed to that expert; tokens whose rank
+exceeds the capacity are dropped (their combine weight masks to zero —
+residual carries them, standard token-dropping behaviour).  This avoids the
+O(S·E·C) one-hot dispatch tensor of the classic GShard einsum — memory is
+O(S·E) + O(E·C·D), jit/pjit-safe (all shapes static).
+
+Expert weights carry the "experts" logical axis → expert parallelism over
+the model mesh axis; the scatter/gather to (E, C, D) buffers becomes XLA
+all-to-alls under pjit.  Aux losses: load-balancing (Switch) + router
+z-loss, returned for the trainer to consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import Ax
+from repro.distributed.ctx import shard
+from repro.models.layers import init_dense
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int  # per-expert hidden
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    mlp: str = "swiglu"
+
+
+def init_moe(key, cfg: MoEConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    import math
+
+    def ew(k, shape, fan_in, axes):
+        return Ax(
+            jax.random.normal(k, shape, jnp.float32) / math.sqrt(fan_in), axes
+        )
+
+    p = {
+        "router": init_dense(ks[0], D, E, ("embed", "experts")),
+        "up": ew(ks[1], (E, D, F), D, ("experts", "embed", "expert_ff")),
+        "down": ew(ks[2], (E, F, D), F, ("experts", "expert_ff", "embed")),
+    }
+    if cfg.mlp == "swiglu":
+        p["gate"] = ew(ks[3], (E, D, F), D, ("experts", "embed", "expert_ff"))
+    return p
+
+
+def apply_moe(params, cfg: MoEConfig, x: jax.Array) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, L, D) -> (y, aux_losses).
+
+    Grouped (GShard-style) dispatch: each batch row is an independent
+    routing group with its own capacity, so the token→buffer scatter never
+    crosses the data axis.  The dispatch buffer is (B, E, C, D) with B on
+    'data' and E on 'model' — the data→expert hop is the all-to-all XLA
+    inserts between those shardings, and expert GEMMs are fully partitioned
+    (a global-capacity buffer would be replicated across the data axis and
+    make every data shard redundantly compute all experts — the 16×
+    useful-FLOPs bug caught by the dry-run roofline; EXPERIMENTS.md §Perf).
+    """
+    B, L, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    logits = (x @ params["router"]["w"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (B, L, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)  # (B, L, K)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, axis=-1, keepdims=True) + 1e-9)
+
+    C = int(cfg.capacity_factor * L * K / E) + 1
+    # per-row rank of each (token, k) within its expert
+    sel = jax.nn.one_hot(gate_idx.reshape(B, L * K), E, dtype=jnp.int32)
+    ranks_all = jnp.cumsum(sel, axis=1) - sel  # (B, L*K, E)
+    rank = jnp.take_along_axis(
+        ranks_all, gate_idx.reshape(B, L * K, 1), axis=2
+    ).reshape(B, L, K)
+    keep = rank < C
+    gate_vals = jnp.where(keep, gate_vals, 0.0)
+
+    # scatter tokens into per-row (E·C, D) buffers (vmapped over B)
+    flat_slot = gate_idx * C + jnp.where(keep, rank, C - 1)  # (B, L, K)
+    src = jnp.repeat(x[:, :, None, :], K, axis=2).reshape(B, L * K, D)
+    src = jnp.where(keep.reshape(B, L * K, 1), src, 0)
+
+    def scatter_row(slots, vals):
+        return jnp.zeros((E * C, D), x.dtype).at[slots].add(vals)
+
+    buf = jax.vmap(scatter_row)(flat_slot.reshape(B, L * K), src)
+    buf = buf.reshape(B, E, C, D)
+    buf = shard(buf, "data", "model", None, None)
+
+    # expert MLPs, batched over (B, E)
+    up = jnp.einsum("becd,edf->becf", buf, params["up"].astype(x.dtype))
+    if cfg.mlp == "swiglu":
+        g = jnp.einsum("becd,edf->becf", buf, params["gate"].astype(x.dtype))
+        h = jax.nn.silu(g) * up
+    elif cfg.mlp == "squared_relu":
+        h = jnp.square(jax.nn.relu(up))
+    else:
+        h = jax.nn.gelu(up)
+    out = jnp.einsum("becf,efd->becd", h, params["down"].astype(x.dtype))
+    out = shard(out, "data", "model", None, None)
+
+    # gather back with combine weights (vmapped over B)
+    def gather_row(buf_row, slots):
+        return buf_row[slots]
+
+    gathered = jax.vmap(gather_row)(
+        out.reshape(B, E * C, D), flat_slot.reshape(B, L * K)
+    )  # (B, L*K, D)
+    gathered = gathered * gate_vals.reshape(B, L * K, 1).astype(x.dtype)
+    y = jnp.sum(gathered.reshape(B, L, K, D), axis=2)
+
+    # aux losses (Switch-style load balance + router z-loss)
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    top1 = jax.nn.one_hot(gate_idx[..., 0], E)
+    ce = jnp.mean(jnp.mean(top1, axis=(0, 1)) * E * me)
+    load_balance = ce * E
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = {"moe_load_balance": load_balance, "moe_z_loss": z_loss}
+    return y, aux

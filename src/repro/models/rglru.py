@@ -1,0 +1,141 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+    r_t = σ(W_a x_t + b_a)                 recurrence gate
+    i_t = σ(W_x x_t + b_x)                 input gate
+    a_t = exp(-c · softplus(Λ) · r_t)      c = 8
+    h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Training uses ``jax.lax.associative_scan`` over the linear recurrence
+(h_t = a_t h_{t-1} + b_t is associative); decode is the O(1) step.  The full
+Griffin recurrent *block* wraps the RG-LRU with a width-4 temporal conv and
+a GeLU gate branch, as in the paper's Figure 2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import Ax
+from repro.distributed.ctx import shard
+from repro.core.fftconv import short_causal_conv
+from repro.models.layers import dense, init_dense
+
+_C = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    d_rnn: int = 0  # lru width; 0 -> d_model
+    conv_width: int = 4
+
+    @property
+    def width(self) -> int:
+        return self.d_rnn or self.d_model
+
+
+def init_rglru(key, cfg: RGLRUConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    W = cfg.width
+    # Λ init so that a^c spans roughly (0.9, 0.999) as in the paper
+    u = jax.random.uniform(ks[0], (W,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log u / c)
+    return {
+        "in_x": init_dense(ks[1], cfg.d_model, W, ("embed", "rnn_hidden")),
+        "in_gate": init_dense(ks[2], cfg.d_model, W, ("embed", "rnn_hidden")),
+        "conv_w": Ax(
+            jax.random.normal(ks[3], (W, cfg.conv_width), jnp.float32)
+            / jnp.sqrt(cfg.conv_width),
+            ("rnn_hidden", None),
+        ),
+        "gate_a": init_dense(ks[4], W, W, ("rnn_hidden", "rnn_hidden")),
+        "gate_x": init_dense(ks[5], W, W, ("rnn_hidden", "rnn_hidden")),
+        "lambda": Ax(lam, ("rnn_hidden",)),
+        "out": init_dense(jax.random.fold_in(key, 7), W, cfg.d_model, ("rnn_hidden", "embed")),
+    }
+
+
+def _rglru_core(params, x: jax.Array, h0=None):
+    """x: (B, L, W) conv output -> (y, h_last). fp32 recurrence."""
+    B, L, W = x.shape
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(dense(params["gate_a"], xf))
+    i = jax.nn.sigmoid(dense(params["gate_x"], xf))
+    log_a = -_C * jax.nn.softplus(params["lambda"])[None, None, :] * r  # (B,L,W)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    A, Bc = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return Bc, Bc[:, -1]
+
+
+def apply_rglru(params, cfg: RGLRUConfig, x: jax.Array, *, pos_offset: int = 0):
+    """Griffin recurrent block: conv + RG-LRU path, GeLU gate branch."""
+    B, L, D = x.shape
+    u = dense(params["in_x"], x)
+    u = shard(u, "data", None, "model")
+    g = jax.nn.gelu(dense(params["in_gate"], x))
+    u = short_causal_conv(u, params["conv_w"])
+    y, _ = _rglru_core(params, u)
+    y = (y.astype(x.dtype)) * g
+    return dense(params["out"], y)
+
+
+def rglru_prefill(
+    params, cfg: RGLRUConfig, x: jax.Array, max_len: int, dtype=jnp.bfloat16,
+    *, pos_offset: int = 0,
+):
+    B, L, D = x.shape
+    u_raw = dense(params["in_x"], x)
+    g = jax.nn.gelu(dense(params["in_gate"], x))
+    u = short_causal_conv(u_raw, params["conv_w"])
+    y, h_last = _rglru_core(params, u)
+    out = dense(params["out"], (y.astype(x.dtype)) * g)
+    K = cfg.conv_width
+    n = min(L, K - 1)
+    hist = jnp.flip(u_raw[:, L - n :], axis=1).astype(dtype)
+    hist = jnp.pad(hist, ((0, 0), (0, K - 1 - n), (0, 0)))
+    cache = {"conv": hist, "h": h_last, "t": jnp.asarray(L, jnp.int32)}
+    return out, cache
+
+
+def init_rglru_cache(cfg: RGLRUConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    W = cfg.width
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, W), dtype),
+        "h": jnp.zeros((batch, W), jnp.float32),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def rglru_decode_step(params, cfg: RGLRUConfig, x_t: jax.Array, cache):
+    B, D = x_t.shape
+    u = dense(params["in_x"], x_t)
+    g = jax.nn.gelu(dense(params["in_gate"], x_t))
+    w = params["conv_w"]
+    hist = cache["conv"]
+    acc = u.astype(jnp.float32) * w[:, 0][None]
+    for k in range(1, cfg.conv_width):
+        acc = acc + hist[:, k - 1].astype(jnp.float32) * w[:, k][None]
+    new_conv = jnp.concatenate(
+        [u[:, None, :].astype(hist.dtype), hist[:, : cfg.conv_width - 2]], axis=1
+    )
+    uf = acc  # fp32 (B, W)
+    r = jax.nn.sigmoid(dense(params["gate_a"], uf))
+    i = jax.nn.sigmoid(dense(params["gate_x"], uf))
+    log_a = -_C * jax.nn.softplus(params["lambda"])[None, :] * r
+    a = jnp.exp(log_a)
+    h = a * cache["h"] + jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+    y = (h.astype(x_t.dtype)) * g
+    y = dense(params["out"], y)
+    return y, {"conv": new_conv, "h": h, "t": cache["t"] + 1}

@@ -1,0 +1,237 @@
+"""Mamba-2 SSD (state-space duality) token mixer (arXiv:2405.21060).
+
+Chunked SSD algorithm: within a Q-length chunk the quadratic "attention
+like" form is used (MXU matmuls); chunk-to-chunk a recurrent state
+``S ∈ R^{H×N×P}`` is carried through a sequential lax.scan.  Decode carries
+the same state with O(1) work per token.
+
+Faithful elements: scalar per-head decay ``a = -exp(A_log)``, softplus dt
+with bias, grouped B/C (ngroups), width-4 causal conv on (x, B, C), gated
+RMSNorm output, D skip.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import Ax
+from repro.distributed.ctx import shard
+from repro.core.fftconv import short_causal_conv
+from repro.models.layers import init_dense, dense
+
+
+@dataclasses.dataclass(frozen=True)
+class SSDConfig:
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init_ssd(key, cfg: SSDConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    di, G, N, H = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads
+    d_in_proj = 2 * di + 2 * G * N + H  # z, x, B, C, dt
+    conv_ch = di + 2 * G * N
+    return {
+        "in_proj": init_dense(ks[0], cfg.d_model, d_in_proj, ("embed", "ssd_inner")),
+        "conv_w": Ax(
+            jax.random.normal(ks[1], (conv_ch, cfg.conv_width), jnp.float32)
+            / jnp.sqrt(cfg.conv_width),
+            ("ssd_inner", None),
+        ),
+        "A_log": Ax(
+            jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)), ("heads",)
+        ),
+        "dt_bias": Ax(jnp.zeros((H,), jnp.float32), ("heads",)),
+        "D": Ax(jnp.ones((H,), jnp.float32), ("heads",)),
+        "norm_g": Ax(jnp.zeros((di,), jnp.float32), ("ssd_inner",)),
+        "out_proj": init_dense(ks[2], di, cfg.d_model, ("ssd_inner", "embed")),
+    }
+
+
+def _split_proj(cfg: SSDConfig, zxbcdt):
+    di, G, N, H = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads
+    z, xin, Bm, Cm, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + G * N, 2 * di + 2 * G * N], axis=-1
+    )
+    return z, xin, Bm, Cm, dt
+
+
+def _ssd_scan(cfg: SSDConfig, x, dt, Bm, Cm, A, initial_state=None):
+    """Chunked SSD. x: (B, L, H, P); dt: (B, L, H); Bm/Cm: (B, L, G, N).
+    Returns y (B, L, H, P) and final state (B, H, N, P)."""
+    Bsz, L, H, P = x.shape
+    G, N = cfg.n_groups, cfg.d_state
+    Q = min(cfg.chunk, L)
+    pad = (-L) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Lp = x.shape[1]
+    nc = Lp // Q
+    rep = H // G  # heads per group
+
+    def resh(t, tail):
+        return t.reshape((Bsz, nc, Q) + tail).transpose((1, 0, 2) + tuple(range(3, 3 + len(tail))))
+
+    xs = resh(x, (H, P))  # (nc, B, Q, H, P)
+    dts = resh(dt, (H,))
+    Bs = resh(Bm, (G, N))
+    Cs = resh(Cm, (G, N))
+
+    def chunk_step(S, inp):
+        xq, dtq, Bq, Cq = inp  # (B, Q, H, P), (B, Q, H), (B, Q, G, N)
+        da = dtq * A[None, None, :]  # (B, Q, H) log-decay increments (<0)
+        s_cum = jnp.cumsum(da, axis=1)  # (B, Q, H) cumulative log decay
+        total = s_cum[:, -1]  # (B, H)
+        # -- intra-chunk (quadratic within chunk)
+        Bh = jnp.repeat(Bq, rep, axis=2)  # (B, Q, H, N)
+        Ch = jnp.repeat(Cq, rep, axis=2)
+        scores = jnp.einsum("bqhn,bkhn->bhqk", Ch, Bh)  # (B, H, Q, Q)
+        decay = s_cum[:, :, None, :] - s_cum[:, None, :, :]  # (B, Q, K, H)
+        decay = decay.transpose(0, 3, 1, 2)  # (B, H, Q, K)
+        iq = jnp.arange(Q)
+        causal = iq[:, None] >= iq[None, :]
+        # mask the exponent (not the output): exp of acausal entries can
+        # overflow to inf, which would leak NaN through the where-vjp.
+        gate = jnp.exp(jnp.where(causal[None, None], decay, -1e30))
+        xdt = xq * dtq[..., None]  # (B, Q, H, P) — dt-weighted input
+        y_intra = jnp.einsum("bhqk,bkhp->bqhp", scores * gate, xdt)
+        # -- inter-chunk: contribution of carried state
+        y_inter = jnp.einsum(
+            "bqhn,bhnp->bqhp", Ch * jnp.exp(s_cum)[..., None], S
+        )
+        # -- state update
+        w = jnp.exp(total[:, None, :] - s_cum)  # decay from step q to chunk end
+        S_new = S * jnp.exp(total)[..., None, None] + jnp.einsum(
+            "bqhn,bqhp->bhnp", Bh * w[..., None], xdt
+        )
+        return S_new, y_intra + y_inter
+
+    if initial_state is None:
+        initial_state = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    S, ys = jax.lax.scan(chunk_step, initial_state, (xs, dts, Bs, Cs))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, Lp, H, P)
+    return y[:, :L], S
+
+
+def apply_ssd(params, cfg: SSDConfig, x: jax.Array, *, pos_offset: int = 0):
+    B, L, D = x.shape
+    H, P, G, N = cfg.n_heads, cfg.head_dim, cfg.n_groups, cfg.d_state
+    zxbcdt = dense(params["in_proj"], x)
+    zxbcdt = shard(zxbcdt, "data", None, "model")
+    z, xin, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    xbc = jax.nn.silu(short_causal_conv(xbc, params["conv_w"]))
+    xin, Bm, Cm = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + G * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,L,H)
+    A = -jnp.exp(params["A_log"])  # (H,) negative
+    xh = xin.reshape(B, L, H, P).astype(jnp.float32)
+    Bmh = Bm.reshape(B, L, G, N).astype(jnp.float32)
+    Cmh = Cm.reshape(B, L, G, N).astype(jnp.float32)
+    y, _ = _ssd_scan(cfg, xh, dt, Bmh, Cmh, A)
+    y = y + xh * params["D"][None, None, :, None]
+    y = y.reshape(B, L, cfg.d_inner).astype(x.dtype)
+    # gated RMSNorm (Mamba-2)
+    g = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(g.astype(jnp.float32)), axis=-1, keepdims=True)
+    g = (g.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6) * (1.0 + params["norm_g"])).astype(x.dtype)
+    return dense(params["out_proj"], g)
+
+
+# ------------------------------------------------------------------ decode
+
+def ssd_prefill(
+    params, cfg: SSDConfig, x: jax.Array, max_len: int, dtype=jnp.bfloat16,
+    *, pos_offset: int = 0,
+):
+    """Forward + capture (conv history, final SSD state)."""
+    B, L, D = x.shape
+    H, P, G, N = cfg.n_heads, cfg.head_dim, cfg.n_groups, cfg.d_state
+    zxbcdt = dense(params["in_proj"], x)
+    z, xin, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+    xbc_raw = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    xbc = jax.nn.silu(short_causal_conv(xbc_raw, params["conv_w"]))
+    xin, Bm, Cm = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + G * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xh = xin.reshape(B, L, H, P).astype(jnp.float32)
+    Bmh = Bm.reshape(B, L, G, N).astype(jnp.float32)
+    Cmh = Cm.reshape(B, L, G, N).astype(jnp.float32)
+    y, S = _ssd_scan(cfg, xh, dt, Bmh, Cmh, A)
+    y = y + xh * params["D"][None, None, :, None]
+    y = y.reshape(B, L, cfg.d_inner).astype(x.dtype)
+    g = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(g.astype(jnp.float32)), axis=-1, keepdims=True)
+    g = (g.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6) * (1.0 + params["norm_g"])).astype(x.dtype)
+    out = dense(params["out_proj"], g)
+    K = cfg.conv_width
+    n = min(L, K - 1)
+    hist = jnp.flip(xbc_raw[:, L - n :], axis=1).astype(dtype)
+    hist = jnp.pad(hist, ((0, 0), (0, K - 1 - n), (0, 0)))
+    cache = {"conv": hist, "state": S, "t": jnp.asarray(L, jnp.int32)}
+    return out, cache
+
+
+def init_ssd_cache(cfg: SSDConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    conv_ch = cfg.d_inner + 2 * cfg.n_groups * cfg.d_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+        "state": jnp.zeros(
+            (batch, cfg.n_heads, cfg.d_state, cfg.head_dim), jnp.float32
+        ),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def ssd_decode_step(params, cfg: SSDConfig, x_t: jax.Array, cache):
+    """x_t: (B, D) one token; O(1) state update."""
+    B, D = x_t.shape
+    H, P, G, N = cfg.n_heads, cfg.head_dim, cfg.n_groups, cfg.d_state
+    zxbcdt = dense(params["in_proj"], x_t)
+    z, xin, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xin, Bm, Cm], axis=-1)  # (B, conv_ch)
+    w = params["conv_w"]  # (conv_ch, K)
+    hist = cache["conv"]
+    acc = xbc.astype(jnp.float32) * w[:, 0][None]
+    for k in range(1, cfg.conv_width):
+        acc = acc + hist[:, k - 1].astype(jnp.float32) * w[:, k][None]
+    new_conv = jnp.concatenate(
+        [xbc[:, None, :].astype(hist.dtype), hist[:, : cfg.conv_width - 2]], axis=1
+    )
+    xbc = jax.nn.silu(acc).astype(x_t.dtype)
+    xin, Bm, Cm = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + G * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B, H)
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt * A[None, :])  # (B, H)
+    xh = xin.reshape(B, H, P).astype(jnp.float32)
+    rep = H // G
+    Bh = jnp.repeat(Bm.reshape(B, G, N), rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cm.reshape(B, G, N), rep, axis=1).astype(jnp.float32)
+    S = cache["state"] * a[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", Bh, xh * dt[..., None]
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, S) + xh * params["D"][None, :, None]
+    y = y.reshape(B, cfg.d_inner).astype(x_t.dtype)
+    g = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(g.astype(jnp.float32)), axis=-1, keepdims=True)
+    g = (g.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6) * (1.0 + params["norm_g"])).astype(x_t.dtype)
+    y = dense(params["out_proj"], g)
+    return y, {"conv": new_conv, "state": S, "t": cache["t"] + 1}

@@ -1,0 +1,109 @@
+"""Hyena-ViT: the paper's §4.5 vision experiment — drop the attention
+operator out of a ViT and drop the (bidirectional, non-causal) Hyena
+operator in, unchanged from its language form except causality.
+
+We keep the language Hyena operator and simply evaluate the long conv
+non-causally (circular FFT conv without the causal zero-pad masking would
+leak; instead we center the filter by rolling — the standard ViT-Hyena
+trick of treating the patch grid as a sequence).  Class-token-free: global
+average pooling (as in the paper: "remove the class token and positional
+embeddings, similar to S4ND").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import Ax
+from repro.core import filters as F
+from repro.core.operator import HyenaConfig
+from repro.models.hyena import apply_hyena_mixer, init_hyena_mixer
+from repro.models.layers import apply_mlp, apply_norm, init_dense, init_mlp, init_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    image_size: int = 32
+    patch_size: int = 4
+    d_model: int = 128
+    n_layers: int = 4
+    d_ff: int = 256
+    n_classes: int = 10
+    hyena_order: int = 2
+    channels: int = 3
+
+    @property
+    def n_patches(self) -> int:
+        return (self.image_size // self.patch_size) ** 2
+
+    @property
+    def patch_dim(self) -> int:
+        return self.channels * self.patch_size ** 2
+
+
+def _hyena_cfg(cfg: ViTConfig) -> HyenaConfig:
+    return HyenaConfig(
+        d_model=cfg.d_model,
+        order=cfg.hyena_order,
+        filter=F.FilterConfig(
+            d_model=cfg.d_model, order=cfg.hyena_order, ffn_width=32, pos_dim=17
+        ),
+    )
+
+
+def init_vit(key, cfg: ViTConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    params: Dict[str, Any] = {
+        "patch": init_dense(ks[0], cfg.patch_dim, cfg.d_model, ("embed", "embed")),
+        "blocks": [],
+        "final_norm": init_norm(cfg.d_model),
+        "head": init_dense(ks[1], cfg.d_model, cfg.n_classes, ("embed", None)),
+    }
+    for i in range(cfg.n_layers):
+        k1, k2 = jax.random.split(ks[2 + i])
+        params["blocks"].append(
+            {
+                "norm1": init_norm(cfg.d_model),
+                "mixer": init_hyena_mixer(k1, _hyena_cfg(cfg)),
+                "norm2": init_norm(cfg.d_model),
+                "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, "gelu"),
+            }
+        )
+    return params
+
+
+def patchify(cfg: ViTConfig, images: jax.Array) -> jax.Array:
+    """(B, H, W, C) -> (B, n_patches, patch_dim)."""
+    B, H, W, C = images.shape
+    p = cfg.patch_size
+    x = images.reshape(B, H // p, p, W // p, p, C)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(B, cfg.n_patches, cfg.patch_dim)
+    return x
+
+
+def apply_vit(params, cfg: ViTConfig, images: jax.Array) -> jax.Array:
+    """(B, H, W, C) -> (B, n_classes) logits."""
+    x = patchify(cfg, images)
+    x = x @ params["patch"]["w"].astype(x.dtype)
+    hcfg = _hyena_cfg(cfg)
+    for blk in params["blocks"]:
+        h = apply_norm(blk["norm1"], x)
+        h = apply_hyena_mixer(blk["mixer"], hcfg, h)
+        x = x + h
+        h = apply_norm(blk["norm2"], x)
+        x = x + apply_mlp(blk["mlp"], h, "gelu")
+    x = apply_norm(params["final_norm"], x)
+    x = jnp.mean(x, axis=1)  # GAP, no class token (paper A.4)
+    return x @ params["head"]["w"].astype(x.dtype)
+
+
+def vit_loss(params, cfg: ViTConfig, images, labels):
+    logits = apply_vit(params, cfg, images).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - ll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "acc": acc}

@@ -1,0 +1,62 @@
+"""Batched serving engine: prefill → jitted decode loop over per-mixer
+caches (KV ring buffers for attention, O(L) conv cache for Hyena, O(1)
+recurrent state for SSD / RG-LRU).
+
+``serve_step`` — one new token against a populated cache — is exactly what
+the multi-pod dry-run lowers for the ``decode_32k`` / ``long_500k`` cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.serve.sampling import sample
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_len: int
+    temperature: float = 0.0
+    top_k: int = 0
+    cache_dtype: Any = jnp.bfloat16
+
+
+def serve_step(params, cfg: ModelConfig, token, caches):
+    """(B,) int32 new token -> (logits (B, V), updated caches)."""
+    return lm.decode_step(params, cfg, token, caches)
+
+
+def generate(
+    params,
+    cfg: ModelConfig,
+    prompts: jax.Array,  # (B, L_prompt) int32
+    *,
+    scfg: ServeConfig,
+    max_new_tokens: int,
+    frontend_embeds: Optional[jax.Array] = None,
+    key=None,
+) -> jax.Array:
+    """Greedy / sampled continuation. Returns (B, max_new_tokens)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    logits, caches = lm.prefill(
+        params, cfg, prompts, scfg.max_len, frontend_embeds,
+        dtype=scfg.cache_dtype,
+    )
+    first = sample(key, logits[:, -1], temperature=scfg.temperature,
+                   top_k=scfg.top_k)
+
+    def body(carry, k):
+        token, caches = carry
+        lg, caches = lm.decode_step(params, cfg, token, caches)
+        nxt = sample(k, lg, temperature=scfg.temperature, top_k=scfg.top_k)
+        return (nxt, caches), token
+
+    keys = jax.random.split(key, max_new_tokens)
+    (_, _), tokens = jax.lax.scan(body, (first, caches), keys)
+    return tokens.T  # (B, T)

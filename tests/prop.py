@@ -1,0 +1,64 @@
+"""Minimal property-based testing shim (hypothesis is not installed in this
+offline container).  Same idea: seeded strategies + a ``@given`` decorator
+running N examples and reporting the failing seed for reproduction.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Callable
+
+import numpy as np
+
+N_EXAMPLES = int(os.environ.get("PROP_EXAMPLES", "25"))
+
+
+class Strategy:
+    def __init__(self, fn: Callable[[np.random.Generator], object]):
+        self.fn = fn
+
+    def sample(self, rng):
+        return self.fn(rng)
+
+
+def integers(lo: int, hi: int) -> Strategy:
+    return Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+
+def floats(lo: float, hi: float) -> Strategy:
+    return Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+
+def sampled_from(options) -> Strategy:
+    opts = list(options)
+    return Strategy(lambda rng: opts[int(rng.integers(0, len(opts)))])
+
+
+def arrays(shape_strategy, lo=-2.0, hi=2.0, dtype=np.float32) -> Strategy:
+    def gen(rng):
+        shape = shape_strategy.sample(rng) if isinstance(shape_strategy, Strategy) else shape_strategy
+        return rng.uniform(lo, hi, size=shape).astype(dtype)
+
+    return Strategy(gen)
+
+
+def given(**strategies):
+    def deco(fn):
+        # NOTE: no functools.wraps — pytest must see a zero-arg signature,
+        # not the strategy parameters (it would look for fixtures).
+        def wrapper():
+            for ex in range(N_EXAMPLES):
+                rng = np.random.default_rng(1000 * ex + 7)
+                drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                try:
+                    fn(**drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"property failed on example {ex} with {drawn!r}: {e}"
+                    ) from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

@@ -1,0 +1,154 @@
+"""Core Hyena operator algebra tests (paper Def 3.1, §3.2, Prop 3.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.param import split_params
+from repro.core import (
+    FilterConfig,
+    HyenaConfig,
+    direct_causal_conv,
+    evaluate_filters,
+    fft_causal_conv,
+    hyena_decode_step,
+    hyena_operator,
+    init_decode_cache,
+    init_hyena,
+    precompute_decode_filters,
+)
+from repro.core.matrices import apply_H, toeplitz
+
+
+def make_op(key, D=16, order=2, L=None, backend="fft"):
+    cfg = HyenaConfig(
+        d_model=D,
+        order=order,
+        filter=FilterConfig(d_model=D, order=order, ffn_width=16, pos_dim=9),
+        conv_backend=backend,
+    )
+    params, _ = split_params(init_hyena(key, cfg))
+    return cfg, params
+
+
+# ---------------------------------------------------------------- fftconv
+
+@pytest.mark.parametrize("L", [1, 2, 8, 33, 128])
+@pytest.mark.parametrize("D", [1, 5])
+def test_fft_conv_matches_direct(L, D):
+    key = jax.random.PRNGKey(0)
+    u = jax.random.normal(key, (2, L, D))
+    h = jax.random.normal(jax.random.PRNGKey(1), (D, L))
+    skip = jax.random.normal(jax.random.PRNGKey(2), (D,))
+    np.testing.assert_allclose(
+        fft_causal_conv(u, h, skip), direct_causal_conv(u, h, skip),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_fft_conv_is_causal():
+    """Perturbing u at position t never changes y before t."""
+    L, D = 32, 4
+    u = jax.random.normal(jax.random.PRNGKey(0), (1, L, D))
+    h = jax.random.normal(jax.random.PRNGKey(1), (D, L))
+    y0 = fft_causal_conv(u, h)
+    t = 17
+    u2 = u.at[:, t:].add(jax.random.normal(jax.random.PRNGKey(2), (1, L - t, D)))
+    y1 = fft_causal_conv(u2, h)
+    np.testing.assert_allclose(y0[:, :t], y1[:, :t], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(y0[:, t:], y1[:, t:])
+
+
+def test_toeplitz_matrix():
+    h = jnp.arange(4.0)
+    S = toeplitz(h)
+    expect = np.array(
+        [[0, 0, 0, 0], [1, 0, 0, 0], [2, 1, 0, 0], [3, 2, 1, 0]], dtype=np.float32
+    )
+    np.testing.assert_allclose(S, expect)
+
+
+# ------------------------------------------------------------- operator
+
+@pytest.mark.parametrize("order", [1, 2, 3])
+def test_recurrence_matches_matrix_form(order):
+    """y = H(u) v with H = D_x^N S^N ... D_x^1 S^1 (paper §3.2)."""
+    key = jax.random.PRNGKey(42)
+    cfg, params = make_op(key, D=8, order=order)
+    u = jax.random.normal(jax.random.PRNGKey(7), (2, 24, 8))
+    y_fast = hyena_operator(params, cfg, u)
+    y_mat = apply_H(params, cfg, u)
+    np.testing.assert_allclose(y_fast, y_mat, rtol=2e-3, atol=2e-3)
+
+
+def test_operator_causality():
+    cfg, params = make_op(jax.random.PRNGKey(0), D=8, order=2)
+    L = 40
+    u = jax.random.normal(jax.random.PRNGKey(1), (1, L, 8))
+    y0 = hyena_operator(params, cfg, u)
+    t = 23
+    u2 = u.at[:, t:].set(0.0)
+    y1 = hyena_operator(params, cfg, u2)
+    np.testing.assert_allclose(y0[:, :t], y1[:, :t], rtol=1e-4, atol=1e-4)
+
+
+def test_operator_linear_in_v_given_gates():
+    """H(u) is linear in v: doubling v (via the value pathway) doubles y
+    when gates are held fixed — checked through the materialized matrix."""
+    from repro.core.matrices import materialize_H
+    cfg, params = make_op(jax.random.PRNGKey(0), D=4, order=2)
+    u = jax.random.normal(jax.random.PRNGKey(1), (1, 12, 4))
+    H = materialize_H(params, cfg, u)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 12, 4))
+    y1 = jnp.einsum("bdlk,bkd->bld", H, v)
+    y2 = jnp.einsum("bdlk,bkd->bld", H, 2.0 * v)
+    np.testing.assert_allclose(2.0 * y1, y2, rtol=1e-5)
+
+
+def test_backends_agree():
+    cfg_f, params = make_op(jax.random.PRNGKey(3), D=8, order=2, backend="fft")
+    cfg_d = HyenaConfig(
+        d_model=8, order=2, filter=cfg_f.filter, conv_backend="direct"
+    )
+    u = jax.random.normal(jax.random.PRNGKey(5), (2, 16, 8))
+    np.testing.assert_allclose(
+        hyena_operator(params, cfg_f, u),
+        hyena_operator(params, cfg_d, u),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_filters_shape_and_grad():
+    cfg = FilterConfig(d_model=8, order=3, ffn_width=16, pos_dim=9)
+    from repro.core.filters import init_hyena_filter
+    params, _ = split_params(init_hyena_filter(jax.random.PRNGKey(0), cfg))
+    h = evaluate_filters(params, cfg, 64)
+    assert h.shape == (3, 8, 64)
+    assert np.isfinite(np.asarray(h)).all()
+
+    def loss(p):
+        return jnp.sum(evaluate_filters(p, cfg, 64) ** 2)
+
+    g = jax.grad(loss)(params)
+    flat = jax.tree_util.tree_leaves(g)
+    assert all(np.isfinite(np.asarray(x)).all() for x in flat)
+    assert any(float(jnp.abs(x).max()) > 0 for x in flat)
+
+
+# --------------------------------------------------------------- decode
+
+def test_decode_matches_prefill():
+    """Token-by-token decode reproduces the teacher-forced forward pass."""
+    D, L, B = 8, 12, 2
+    cfg, params = make_op(jax.random.PRNGKey(0), D=D, order=2)
+    u = jax.random.normal(jax.random.PRNGKey(1), (B, L, D))
+    y_ref = hyena_operator(params, cfg, u)
+
+    cache = init_decode_cache(cfg, B, max_len=L, dtype=jnp.float32)
+    cache = precompute_decode_filters(params, cfg, L, cache)
+    ys = []
+    for t in range(L):
+        y_t, cache = hyena_decode_step(params, cfg, u[:, t], cache)
+        ys.append(y_t)
+    y_dec = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(y_dec, y_ref, rtol=5e-3, atol=5e-3)

@@ -1,0 +1,292 @@
+"""Optimizer / trainer / checkpoint / data-pipeline / FT tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import prop
+from repro.configs import get_config
+from repro.data import lm_data, synthetic, tokenizer
+from repro.models import lm
+from repro.train import checkpoint as ckpt
+from repro.train import ft
+from repro.train import optim as O
+from repro.train.trainer import TrainConfig, init_train_state, make_train_step
+
+
+# ---------------------------------------------------------------- optimizer
+
+def test_adamw_matches_hand_math():
+    """One AdamW step on a scalar parameter vs hand-computed update."""
+    cfg = O.AdamWConfig(lr=0.1, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0,
+                        clip_norm=None, warmup_steps=0, schedule="constant")
+    p = {"w": jnp.full((2, 2), 2.0)}
+    g = {"w": jnp.full((2, 2), 0.5)}
+    st = O.init_adamw(p)
+    new_p, st, _ = O.adamw_update(cfg, g, st, p)
+    m = 0.1 * 0.5
+    v = 0.01 * 0.25
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.99)
+    expect = 2.0 - 0.1 * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(new_p["w"], expect, rtol=1e-6)
+
+
+def test_weight_decay_skips_1d():
+    cfg = O.AdamWConfig(lr=0.1, weight_decay=0.5, clip_norm=None,
+                        warmup_steps=0, schedule="constant")
+    p = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+    g = {"w": jnp.zeros((2, 2)), "b": jnp.zeros((2,))}
+    st = O.init_adamw(p)
+    new_p, _, _ = O.adamw_update(cfg, g, st, p)
+    assert float(jnp.abs(new_p["w"] - 1.0).max()) > 0  # decayed
+    np.testing.assert_allclose(new_p["b"], 1.0)  # not decayed
+
+
+def test_clip_norm():
+    cfg = O.AdamWConfig(clip_norm=1.0, warmup_steps=0, schedule="constant")
+    g = {"w": jnp.full((10,), 100.0)}
+    gnorm = O.global_norm(g)
+    assert float(gnorm) > 1.0
+
+
+def test_schedule_shapes():
+    cfg = O.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                        min_lr_ratio=0.1)
+    lrs = [float(O.schedule_lr(cfg, jnp.asarray(s))) for s in [0, 5, 10, 55, 100]]
+    assert lrs[0] == 0.0
+    assert abs(lrs[2] - 1.0) < 1e-6
+    assert lrs[3] < lrs[2]
+    assert abs(lrs[4] - 0.1) < 1e-3
+
+
+# ---------------------------------------------------------------- trainer
+
+def test_loss_decreases_on_recall():
+    """End-to-end: a tiny Hyena LM learns associative recall (paper §4.1)."""
+    cfg = get_config("hyena-153m").reduced()
+    import dataclasses
+    cfg = dataclasses.replace(cfg, vocab_size=32, n_layers=2)
+    rng = np.random.default_rng(0)
+    tokens, labels = synthetic.associative_recall(rng, n=64, seq_len=32, vocab=16)
+    tcfg = TrainConfig(
+        optimizer=O.AdamWConfig(lr=2e-3, warmup_steps=5, total_steps=60,
+                                weight_decay=0.0),
+        remat=False,
+    )
+    state, _ = init_train_state(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    batch = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+    losses = []
+    for i in range(30):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] * 0.7, losses[::5]
+
+
+def test_microbatch_equals_full_batch_grads():
+    """Gradient accumulation: mean of 2 microbatch grads == full-batch grad.
+
+    (Comparing *gradients*, not post-Adam params: Adam's first step is
+    ±lr·sign(g), so near-zero grads amplify bf16 noise into sign flips.)
+    """
+    cfg = get_config("hyena-153m").reduced()
+    import dataclasses
+    cfg = dataclasses.replace(cfg, vocab_size=32, n_layers=2)
+    rng = np.random.default_rng(1)
+    tokens, labels = synthetic.majority(rng, n=8, seq_len=16, vocab=8)
+    state, _ = init_train_state(jax.random.PRNGKey(0), cfg)
+    p = state["params"]
+    loss = lambda p, t, l: lm.loss_fn(p, cfg, t, l, remat=False)[0]
+    g_full = jax.grad(loss)(p, jnp.asarray(tokens), jnp.asarray(labels))
+    g_a = jax.grad(loss)(p, jnp.asarray(tokens[:4]), jnp.asarray(labels[:4]))
+    g_b = jax.grad(loss)(p, jnp.asarray(tokens[4:]), jnp.asarray(labels[4:]))
+    g_acc = jax.tree_util.tree_map(lambda a, b: (a + b) / 2.0, g_a, g_b)
+    for x, y in zip(jax.tree_util.tree_leaves(g_full),
+                    jax.tree_util.tree_leaves(g_acc)):
+        x, y = np.asarray(x, np.float32), np.asarray(y, np.float32)
+        denom = max(np.abs(x).max(), np.abs(y).max(), 1e-3)
+        assert np.abs(x - y).max() / denom < 3e-2
+
+
+# -------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": [{"b": jnp.ones((4,), jnp.bfloat16)}, jnp.zeros((), jnp.int32)],
+    }
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 7, tree, meta={"note": "x"})
+    like = jax.tree_util.tree_map(lambda x: x, tree)
+    restored, meta, step = ckpt.restore(d, like)
+    assert step == 7 and meta["note"] == "x"
+    for x, y in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32), np.asarray(y, np.float32))
+
+
+def test_checkpoint_uncommitted_ignored(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"a": jnp.ones((2,))}
+    ckpt.save(d, 1, tree)
+    # fake a crashed (uncommitted) later step
+    os.makedirs(os.path.join(d, "step_00000002"))
+    assert ckpt.latest_step(d) == 1
+
+
+def test_checkpoint_integrity(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"a": jnp.ones((8,))}
+    path = ckpt.save(d, 3, tree)
+    fn = [f for f in os.listdir(path) if f.endswith(".npy")][0]
+    arr = np.load(os.path.join(path, fn))
+    np.save(os.path.join(path, fn), arr + 1)  # corrupt
+    with pytest.raises(IOError):
+        ckpt.restore(d, tree)
+
+
+def test_async_checkpointer(tmp_path):
+    d = str(tmp_path / "ck")
+    ac = ckpt.AsyncCheckpointer(d, keep_last=2)
+    tree = {"a": jnp.ones((4,))}
+    for s in [1, 2, 3]:
+        ac.save(s, tree, meta={"s": s})
+    ac.close()
+    assert ckpt.latest_step(d) == 3
+    steps = sorted(os.listdir(d))
+    assert "step_00000001" not in steps  # cleaned up
+
+
+def test_checkpoint_train_state_resume(tmp_path):
+    """Save mid-training, restore, and verify identical continuation."""
+    cfg = get_config("hyena-153m").reduced()
+    import dataclasses
+    cfg = dataclasses.replace(cfg, vocab_size=32, n_layers=2)
+    rng = np.random.default_rng(2)
+    tokens, labels = synthetic.counting(rng, n=8, seq_len=16, vocab=8)
+    batch = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+    tcfg = TrainConfig(optimizer=O.AdamWConfig(lr=1e-3, warmup_steps=0),
+                       remat=False)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    state, _ = init_train_state(jax.random.PRNGKey(0), cfg)
+    state, _ = step(state, batch)
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, state)
+    restored, _, _ = ckpt.restore(d, state)
+    s_a, _ = step(state, batch)
+    s_b, _ = step(restored, batch)
+    for x, y in zip(jax.tree_util.tree_leaves(s_a["params"]),
+                    jax.tree_util.tree_leaves(s_b["params"])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# -------------------------------------------------------------------- data
+
+def test_loader_deterministic_and_resumable():
+    corpus = np.arange(10_000, dtype=np.int32) % 255
+    mk = lambda cur: lm_data.TokenStream(
+        corpus, global_batch=4, seq_len=16, cursor=cur, seed=3
+    )
+    s1 = mk(0)
+    batches = [s1.next_batch() for _ in range(5)]
+    s2 = mk(0)
+    for _ in range(3):
+        s2.next_batch()
+    state = s2.state()
+    s3 = mk(0)
+    s3.restore(state)
+    np.testing.assert_array_equal(s3.next_batch()["tokens"], batches[3]["tokens"])
+
+
+def test_loader_host_sharding_partitions_batch():
+    corpus = np.arange(10_000, dtype=np.int32) % 255
+    full = lm_data.TokenStream(corpus, global_batch=4, seq_len=16, seed=1)
+    h0 = lm_data.TokenStream(corpus, global_batch=4, seq_len=16, seed=1,
+                             host_id=0, n_hosts=2)
+    h1 = lm_data.TokenStream(corpus, global_batch=4, seq_len=16, seed=1,
+                             host_id=1, n_hosts=2)
+    b = full.next_batch()["tokens"]
+    b0 = h0.next_batch()["tokens"]
+    b1 = h1.next_batch()["tokens"]
+    np.testing.assert_array_equal(np.concatenate([b0, b1]), b)
+
+
+def test_labels_are_next_tokens():
+    corpus = np.arange(1000, dtype=np.int32) % 255
+    s = lm_data.TokenStream(corpus, global_batch=2, seq_len=8,
+                            shuffle_windows=False, seed=0)
+    b = s.next_batch()
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+
+def test_prefetcher_consumed_state():
+    corpus = np.arange(10_000, dtype=np.int32) % 255
+    s = lm_data.TokenStream(corpus, global_batch=2, seq_len=16, seed=5)
+    pf = lm_data.Prefetcher(s, depth=2)
+    b1 = pf.next()
+    st = pf.consumed_state
+    assert st["cursor"] == 1
+    pf.close()
+
+
+def test_tokenizer_roundtrip():
+    text = "Hyena hierarchy — attention-free!"
+    ids = tokenizer.encode(text)
+    assert tokenizer.decode(ids) == text
+
+
+# ------------------------------------------------------------- synthetics
+
+@prop.given(vocab=prop.integers(8, 40), seq_pow=prop.integers(3, 6))
+def test_recall_labels_consistent(vocab, seq_pow):
+    rng = np.random.default_rng(0)
+    tokens, labels = synthetic.associative_recall(
+        rng, n=4, seq_len=2 ** seq_pow, vocab=vocab
+    )
+    mask = labels != synthetic.IGNORE
+    assert mask.sum() == 4  # one supervised position per sequence
+    # the label equals the token that follows the supervised position
+    i, j = np.nonzero(mask)
+    np.testing.assert_array_equal(labels[i, j], tokens[i, j + 1])
+
+
+def test_addition_digits():
+    rng = np.random.default_rng(0)
+    tokens, labels = synthetic.addition(rng, n=8, n_digits=3)
+    a = tokens[:, 0] * 100 + tokens[:, 1] * 10 + tokens[:, 2]
+    b = tokens[:, 3] * 100 + tokens[:, 4] * 10 + tokens[:, 5]
+    s = (
+        tokens[:, 6] * 1000 + tokens[:, 7] * 100 + tokens[:, 8] * 10 + tokens[:, 9]
+    )
+    np.testing.assert_array_equal(a + b, s)
+
+
+# --------------------------------------------------------------------- FT
+
+def test_straggler_monitor():
+    m = ft.StragglerMonitor(threshold=2.0)
+    for _ in range(10):
+        m.record(0, 1.0)
+    assert m.record(11, 5.0) is True
+    assert m.stragglers == 1
+
+
+def test_preemption_flag():
+    h = ft.PreemptionHandler(signals=())
+    assert not h.preempted()
+    h.trigger()
+    assert h.preempted()
+
+
+def test_retry_recovers():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise IOError("transient")
+        return 42
+
+    assert ft.retry(flaky, attempts=5, base_delay=0.001) == 42
