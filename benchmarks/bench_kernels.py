@@ -19,17 +19,25 @@ def _time(fn, *args, iters=3):
 
 
 def run(rows):
-    from repro.core.blockfft import blockfft_causal_conv
-    from repro.core.fftconv import fft_causal_conv
+    from repro.core.conv_api import registered_conv_backends
     from repro.kernels import ref
 
     B, L, D = 2, 2048, 64
     u = jax.random.normal(jax.random.PRNGKey(0), (B, L, D))
     h = jax.random.normal(jax.random.PRNGKey(1), (D, L)) / L
-    fft_t = _time(jax.jit(fft_causal_conv), u, h)
-    blk_t = _time(jax.jit(blockfft_causal_conv), u, h)
-    rows.append(("kernels/fftconv_L2048", fft_t, "xla_fft"))
-    rows.append(("kernels/blockfft_L2048", blk_t, "matmul_dft"))
+    # conv-backend comparison straight off the registry: new backends show
+    # up here (and in the §Perf iteration) with zero bench edits.
+    from repro.distributed.ctx import current_mesh
+
+    for name, backend in sorted(registered_conv_backends().items()):
+        if backend.oracle or (backend.max_len and L > backend.max_len):
+            continue  # O(L²) references are not a timing row at L=2048
+        if backend.requires_pallas and jax.default_backend() != "tpu":
+            continue  # interpret-mode timing is meaningless
+        if backend.mesh_aware and current_mesh() is None:
+            continue  # would fall back to the local path — duplicate row
+        t = _time(jax.jit(backend.fn), u, h)
+        rows.append((f"kernels/conv_{name}_L{L}", t, backend.tag or name))
 
     g = jax.random.normal(jax.random.PRNGKey(2), (D,)) * 0.1
     x = jax.random.normal(jax.random.PRNGKey(3), (B * L, D))

@@ -35,3 +35,36 @@ def lm_total_flops(layer_flops: float, n_layers: int, d_model: int,
     head = 2.0 * d_model * vocab * L
     total = layer_flops * n_layers + head
     return total * 3.0 if train else total  # bwd = 2x fwd
+
+
+# ------------------------------------------------- registry-driven accounting
+
+def mixer_flops(mixer: str, cfg, L: int) -> float:
+    """Forward FLOPs of one named mixer layer via its registry metadata
+    (``TokenMixer.flops``) — the same tables the conformance suite checks
+    against measured parameter shapes."""
+    from repro.models.mixer_api import get_mixer
+
+    return get_mixer(mixer).flops(cfg, L)
+
+
+def lm_flops_from_registry(cfg, L: int, train: bool = True) -> float:
+    """Total step FLOPs for a ``ModelConfig``: per-pattern mixer flops from
+    the TokenMixer registry + channel-mixer + head.  Unlike the hand
+    formulas above, this covers arbitrary hybrid patterns (e.g.
+    RecurrentGemma's rglru/rglru/local_attention) with no per-arch math."""
+    plen = len(cfg.pattern)
+    per_pattern = sum(mixer_flops(m, cfg, L) for m in cfg.pattern)
+    n_groups = cfg.n_layers // plen
+    total = per_pattern * n_groups
+    for m in cfg.pattern[: cfg.n_layers % plen]:  # unstacked tail layers
+        total += mixer_flops(m, cfg, L)
+    if cfg.d_ff > 0:
+        # gated MLPs (swiglu/geglu) have an extra gate matmul per layer
+        n_mats = 3 if cfg.mlp in ("swiglu", "geglu") else 2
+        mlp = 2.0 * n_mats * cfg.d_model * cfg.d_ff * L
+        if cfg.moe and cfg.n_experts:
+            mlp *= cfg.top_k  # active experts per token
+        total += mlp * cfg.n_layers
+    total += 2.0 * cfg.d_model * cfg.vocab_size * L  # head
+    return total * 3.0 if train else total  # bwd = 2x fwd

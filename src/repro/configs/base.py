@@ -67,20 +67,27 @@ class ModelConfig:
     # ---------------------------------------------------------------- helpers
     @property
     def attention_free(self) -> bool:
-        return all(m in ("ssd", "rglru", "hyena") for m in self.pattern)
+        """No dense global-KV attention anywhere in the pattern (capability
+        metadata from the TokenMixer registry)."""
+        from repro.models.mixer_api import get_mixer
+
+        return all(get_mixer(m).attention_free for m in self.pattern)
 
     @property
     def subquadratic(self) -> bool:
         """Can run 500K-token decode without a dense global-KV attention."""
-        return all(
-            m in ("ssd", "rglru", "hyena", "local_attention") for m in self.pattern
-        )
+        from repro.models.mixer_api import get_mixer
+
+        return all(get_mixer(m).subquadratic for m in self.pattern)
 
     def with_mixer(self, mixer: str) -> "ModelConfig":
-        """The paper's drop-in swap: replace every (local_)attention layer's
-        mixer with `mixer` (e.g. "hyena")."""
+        """The paper's drop-in swap: replace every mixer that is *not*
+        attention-free (per registry metadata) with `mixer` (e.g. "hyena")."""
+        from repro.models.mixer_api import get_mixer
+
+        get_mixer(mixer)  # validate the target name against the registry
         new_pattern = tuple(
-            mixer if m in ("attention", "local_attention") else m
+            mixer if not get_mixer(m).attention_free else m
             for m in self.pattern
         )
         return dataclasses.replace(
@@ -121,6 +128,12 @@ _REGISTRY: Dict[str, ModelConfig] = {}
 
 
 def register(cfg: ModelConfig) -> ModelConfig:
+    # config-time validation: every pattern entry must name a registered
+    # TokenMixer — a typo fails at import, not deep inside a forward pass.
+    from repro.models.mixer_api import get_mixer
+
+    for m in cfg.pattern:
+        get_mixer(m)
     _REGISTRY[cfg.name] = cfg
     return cfg
 

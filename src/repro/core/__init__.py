@@ -13,3 +13,10 @@ from repro.core.fftconv import (  # noqa: F401
     short_causal_conv,
     conv_cache_step,
 )
+from repro.core.conv_api import (  # noqa: F401
+    ConvBackend,
+    get_conv_backend,
+    register_conv_backend,
+    registered_conv_backends,
+    resolve_conv_backend,
+)

@@ -1,0 +1,160 @@
+"""ConvBackend registry: the single dispatch point for Hyena's long
+causal convolution (see DESIGN.md §2–3).
+
+Every backend implements the same contract — ``fn(u, h, skip) -> y`` with
+``u: (B, L, D)``, ``h: (D, L)``, ``skip: (D,) | None`` — plus capability
+metadata used for *early* validation (at config/context construction, not
+mid-forward) and for tooling (benchmarks iterate the registry instead of
+hard-coding imports).
+
+Adding a backend is one module + one ``register_conv_backend`` call; no
+dispatch site anywhere else changes.  Backend resolution — including the
+``REPRO_CONV_BACKEND`` environment override used by the launch layer — goes
+through :func:`resolve_conv_backend`, the only place that env var is read.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, Dict, Optional
+
+ENV_VAR = "REPRO_CONV_BACKEND"
+DEFAULT_BACKEND = "fft"
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvBackend:
+    """A registered long-conv implementation with capability flags.
+
+    ``fn(u, h, skip)``: depthwise causal conv of ``u (B, L, D)`` with
+    per-channel length-L filters ``h (D, L)`` and optional residual gain
+    ``skip (D,)``.
+    """
+
+    name: str
+    fn: Callable
+    description: str = ""
+    tag: str = ""  # short stable identifier for benchmark/report rows
+    requires_pallas: bool = False  # Pallas lowering (interpret-mode off-TPU)
+    mesh_aware: bool = False  # runs collective-free under a sharded mesh
+    oracle: bool = False  # O(L²) reference — tests/tiny L only
+    max_len: int = 0  # 0 = unconstrained; else largest supported L
+
+    def validate_len(self, L: int) -> None:
+        if self.max_len and L > self.max_len:
+            raise ValueError(
+                f"conv backend '{self.name}' supports L <= {self.max_len}, "
+                f"got {L}"
+            )
+
+    def __call__(self, u, h, skip=None):
+        return self.fn(u, h, skip)
+
+
+_BACKENDS: Dict[str, ConvBackend] = {}
+
+
+def register_conv_backend(backend: ConvBackend) -> ConvBackend:
+    """Duplicate names raise unless the registration is identical — silent
+    shadowing of e.g. 'fft' would swap the conv under every model."""
+    prev = _BACKENDS.get(backend.name)
+    if prev is not None and prev != backend:
+        raise ValueError(f"conv backend '{backend.name}' already registered")
+    _BACKENDS[backend.name] = backend
+    return backend
+
+
+def conv_backend_names() -> tuple:
+    return tuple(sorted(_BACKENDS))
+
+
+def registered_conv_backends() -> Dict[str, ConvBackend]:
+    return dict(_BACKENDS)
+
+
+def get_conv_backend(name: Optional[str]) -> ConvBackend:
+    """Look up a backend; ``None`` means the registry default — the
+    None-means-default rule lives here, not at dispatch sites."""
+    name = name or DEFAULT_BACKEND
+    if name not in _BACKENDS:
+        raise ValueError(
+            f"unknown conv backend '{name}'; registered: "
+            f"{list(conv_backend_names())}"
+        )
+    return _BACKENDS[name]
+
+
+def resolve_conv_backend(
+    override: Optional[str] = None, *, default: str = DEFAULT_BACKEND
+) -> str:
+    """One resolution point for the long-conv backend name.
+
+    Priority: explicit ``override`` > ``$REPRO_CONV_BACKEND`` > ``default``.
+    The resolved name is validated against the registry — unknown names
+    raise immediately (config/launch time) with the registered list.
+    """
+    name = override or os.environ.get(ENV_VAR) or default
+    get_conv_backend(name)
+    return name
+
+
+# --------------------------------------------------------------- built-ins
+#
+# The wrappers import lazily so that e.g. the Pallas toolchain is only
+# touched when the 'toeplitz' backend is actually selected.
+
+def _fft(u, h, skip=None):
+    from repro.core.fftconv import fft_causal_conv_sharded
+
+    return fft_causal_conv_sharded(u, h, skip)
+
+
+def _fft_local(u, h, skip=None):
+    from repro.core.fftconv import fft_causal_conv
+
+    return fft_causal_conv(u, h, skip)
+
+
+def _direct(u, h, skip=None):
+    from repro.core.fftconv import direct_causal_conv
+
+    return direct_causal_conv(u, h, skip)
+
+
+def _blockfft(u, h, skip=None):
+    from repro.core.blockfft import blockfft_causal_conv
+
+    return blockfft_causal_conv(u, h, skip)
+
+
+def _toeplitz(u, h, skip=None):
+    from repro.kernels import ops as kops
+
+    return kops.toeplitz_conv(u, h, skip)
+
+
+register_conv_backend(ConvBackend(
+    name="fft", tag="shard_map_fft", fn=_fft, mesh_aware=True,
+    description="O(L log L) real FFT on 2L points; shard_map-forced "
+    "per-chip execution under a mesh, plain XLA FFT otherwise.",
+))
+register_conv_backend(ConvBackend(
+    name="fft_local", tag="xla_fft", fn=_fft_local,
+    description="single-device XLA FFT path (no shard_map), used as the "
+    "oracle for the sharded variant.",
+))
+register_conv_backend(ConvBackend(
+    name="direct", tag="toeplitz_oracle", fn=_direct, oracle=True, max_len=4096,
+    description="O(L²) materialized lower-triangular Toeplitz matmul — "
+    "the correctness oracle for tiny L.",
+))
+register_conv_backend(ConvBackend(
+    name="blockfft", tag="matmul_dft", fn=_blockfft,
+    description="four-step (Bailey) FFT with the small DFTs as dense "
+    "matmuls — every FLOP on the MXU (H3-style block FFT).",
+))
+register_conv_backend(ConvBackend(
+    name="toeplitz", tag="pallas_mxu", fn=_toeplitz, requires_pallas=True,
+    description="chunked block-Toeplitz Pallas MXU kernel (DESIGN.md §2); "
+    "interpret-mode off-TPU, jnp oracle on CPU.",
+))

@@ -55,7 +55,7 @@ def fft_causal_conv_sharded(
     model) removes that traffic entirely: zero collectives inside the conv
     (EXPERIMENTS.md §Perf pair A).
     """
-    from repro.distributed.ctx import current_mesh
+    from repro.distributed.ctx import current_mesh, shard_map
     from jax.sharding import PartitionSpec as P
 
     mesh = current_mesh()
@@ -72,12 +72,12 @@ def fft_causal_conv_sharded(
         return fft_causal_conv(u, h, skip)
     bspec = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
     skip_in = skip if skip is not None else jnp.zeros((D,), jnp.float32)
-    fn = jax.shard_map(
+    fn = shard_map(
         lambda ub, hb, sb: fft_causal_conv(ub, hb, sb),
         mesh=mesh,
         in_specs=(P(bspec, None, model), P(model, None), P(model)),
         out_specs=P(bspec, None, model),
-        check_vma=False,  # FFT transpose rule trips the vma checker under AD
+        check=False,  # FFT transpose rule trips the vma checker under AD
     )
     return fn(u, h, skip_in)
 

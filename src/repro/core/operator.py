@@ -13,9 +13,11 @@ Forward pass (Algorithm 3), width D, order N, channel-last activations:
 Equivalently ``y = H(u)v`` with ``H(u) = D_x^N S_h^N ⋯ D_x^1 S_h^1`` — tested
 against :mod:`repro.core.matrices`.  H3 == Hyena₂, GSS == Hyena₁ (Rmk 3.2).
 
-The conv backend is pluggable: ``fft`` (default, O(L log L)), ``direct``
-(O(L²) oracle), or ``toeplitz`` (Pallas chunked block-Toeplitz MXU kernel —
-the TPU adaptation of the paper's fused CUDA FFTConv; see DESIGN.md §2).
+The conv backend is pluggable through the :mod:`repro.core.conv_api`
+registry: ``fft`` (default, O(L log L)), ``fft_local``, ``direct`` (O(L²)
+oracle), ``blockfft`` (MXU four-step FFT), or ``toeplitz`` (Pallas chunked
+block-Toeplitz MXU kernel — the TPU adaptation of the paper's fused CUDA
+FFTConv; see DESIGN.md §2).
 """
 from __future__ import annotations
 
@@ -27,12 +29,8 @@ import jax.numpy as jnp
 
 from repro.common.param import Ax
 from repro.core import filters as F
-from repro.core.fftconv import (
-    conv_cache_step,
-    direct_causal_conv,
-    fft_causal_conv,
-    short_causal_conv,
-)
+from repro.core.conv_api import get_conv_backend
+from repro.core.fftconv import conv_cache_step, short_causal_conv
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,8 +39,10 @@ class HyenaConfig:
     order: int = 2
     short_filter_len: int = 3
     filter: F.FilterConfig = None  # type: ignore[assignment]
-    conv_backend: str = "fft"  # fft | direct | toeplitz
     use_bias: bool = True
+    # NOTE: the long-conv backend is deliberately NOT part of this config —
+    # it is an execution concern resolved exactly once, by the caller's
+    # ApplyContext (repro.models.mixer_api) against repro.core.conv_api.
 
     def __post_init__(self):
         if self.filter is None:
@@ -95,26 +95,22 @@ def _project(params, cfg: HyenaConfig, u: jax.Array):
     return v, xs
 
 
-def _long_conv(cfg: HyenaConfig, v, h_n, skip_n):
-    if cfg.conv_backend == "fft":
-        return fft_causal_conv(v, h_n, skip_n)
-    if cfg.conv_backend == "direct":
-        return direct_causal_conv(v, h_n, skip_n)
-    if cfg.conv_backend == "toeplitz":
-        from repro.kernels import ops as kops
+def hyena_operator(
+    params, cfg: HyenaConfig, u: jax.Array, *, conv_backend: Optional[str] = None
+) -> jax.Array:
+    """y = Hyena_N(u), u: (B, L, D) -> (B, L, D).
 
-        return kops.toeplitz_conv(v, h_n, skip=skip_n)
-    raise ValueError(f"unknown conv backend {cfg.conv_backend}")
-
-
-def hyena_operator(params, cfg: HyenaConfig, u: jax.Array) -> jax.Array:
-    """y = Hyena_N(u), u: (B, L, D) -> (B, L, D)."""
+    ``conv_backend`` names a :mod:`repro.core.conv_api` registration
+    (default ``"fft"``); unknown names raise here, before any tracing.
+    """
     B, L, D = u.shape
+    backend = get_conv_backend(conv_backend)
+    backend.validate_len(L)
     v, xs = _project(params, cfg, u)
     h = F.evaluate_filters(params["filters"], cfg.filter, L)  # (N, D, L)
     skip = F.filter_skip(params["filters"], cfg.filter)  # (N, D)
     for n in range(cfg.order):
-        v = xs[n] * _long_conv(cfg, v, h[n], skip[n]).astype(u.dtype)
+        v = xs[n] * backend(v, h[n], skip[n]).astype(u.dtype)
     y = v @ params["out_proj"]["w"].astype(u.dtype)
     if "b" in params["out_proj"]:
         y = y + params["out_proj"]["b"].astype(u.dtype)

@@ -65,11 +65,13 @@ def pipeline_forward(
         result = outs[S - 1 :]
         return result
 
-    fn = jax.shard_map(
+    from repro.distributed.ctx import shard_map
+
+    fn = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(axis), P()),  # params stage-sharded; x replicated
         out_specs=P(),
-        check_vma=False,
+        check=False,
     )
     return fn(stage_params, x)

@@ -35,7 +35,8 @@ def _sp_conv_body(u_blk, h_blk, skip, *, axis: str, L: int, D: int):
     all-to-all; local FFTs of length N/P; cross-shard P-point DFT via
     ppermute-accumulated matmul (P is small: the mesh axis).
     """
-    P_sz = jax.lax.axis_size(axis)
+    # jax.lax.axis_size is new-API only; psum(1) is the portable spelling
+    P_sz = jax.lax.psum(1, axis)
     idx = jax.lax.axis_index(axis)
     B = u_blk.shape[0]
     Lp = u_blk.shape[1]
@@ -147,7 +148,9 @@ def sp_fft_causal_conv(
     validated against fft_causal_conv in tests (8 host devices)."""
     B, L, D = u.shape
     skip_in = skip if skip is not None else jnp.zeros((D,), jnp.float32)
-    fn = jax.shard_map(
+    from repro.distributed.ctx import shard_map
+
+    fn = shard_map(
         lambda ub, hb, s: _sp_conv_body(ub, hb, s, axis=axis, L=L, D=D),
         mesh=mesh,
         in_specs=(P(None, axis, None), P(None, axis), P(None)),

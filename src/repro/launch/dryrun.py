@@ -42,10 +42,12 @@ from repro.common.param import split_params
 from repro.configs import get_config
 from repro.configs.registry import ASSIGNED
 from repro.configs.shapes import SHAPES, input_specs, token_specs
+from repro.core.conv_api import resolve_conv_backend
 from repro.distributed import ctx
 from repro.distributed.sharding import param_shardings
 from repro.launch.mesh import make_production_mesh
 from repro.models import lm
+from repro.models.mixer_api import ApplyContext, resolve_remat_policy
 from repro.train import optim as O
 from repro.train.trainer import TrainConfig, make_train_step
 
@@ -198,10 +200,13 @@ def build_step(cfg, shape_name: str, mesh: Mesh, *, unroll=False, probe_groups=N
     shape = SHAPES[shape_name]
     run_cfg = cfg if probe_groups is None else _reduced_depth_cfg(cfg, probe_groups)
     if shape.kind == "train":
+        # conv backend resolved once, against the registry: explicit override
+        # > $REPRO_CONV_BACKEND > default — unknown names raise here with the
+        # registered list, not mid-lowering.
         tcfg = TrainConfig(
             optimizer=O.AdamWConfig(), remat=True, unroll=unroll,
-            conv_backend=os.environ.get("REPRO_CONV_BACKEND"),
-            remat_policy=os.environ.get("REPRO_REMAT_POLICY", "nothing"),
+            conv_backend=resolve_conv_backend(),
+            remat_policy=resolve_remat_policy(),
         )
         params, axes = abstract_params(run_cfg)
         opt_struct = {
@@ -226,10 +231,14 @@ def build_step(cfg, shape_name: str, mesh: Mesh, *, unroll=False, probe_groups=N
         specs = token_specs(run_cfg, shape)
         batch_shard = {k: data_spec(mesh, v.ndim, v.shape[0]) for k, v in specs.items()}
 
+        fwd_ctx = ApplyContext(
+            conv_backend=resolve_conv_backend(), unroll=unroll
+        )
+
         def fwd(params, batch):
             logits, _ = lm.forward(
                 params, run_cfg, batch["tokens"],
-                batch.get("frontend_embeds"), remat=False, unroll=unroll,
+                batch.get("frontend_embeds"), ctx=fwd_ctx,
             )
             return logits
 
@@ -241,8 +250,10 @@ def build_step(cfg, shape_name: str, mesh: Mesh, *, unroll=False, probe_groups=N
     cshard = cache_sharding_tree(dspecs["caches"], mesh, shape.batch)
     tok_shard = data_spec(mesh, 1, shape.batch)
 
+    serve_ctx = ApplyContext(unroll=unroll)
+
     def serve_fn(params, token, caches):
-        return lm.decode_step(params, run_cfg, token, caches, unroll=unroll)
+        return lm.decode_step(params, run_cfg, token, caches, ctx=serve_ctx)
 
     return (
         serve_fn,
@@ -317,8 +328,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         "pattern": list(cfg.pattern),
         "n_layers": cfg.n_layers,
         "status": "ok",
-        "conv_backend": os.environ.get("REPRO_CONV_BACKEND"),
-        "remat_policy": os.environ.get("REPRO_REMAT_POLICY", "nothing"),
+        "conv_backend": resolve_conv_backend(),
+        "remat_policy": resolve_remat_policy(),
     }
     params_struct, _ = abstract_params(cfg)
     record.update(model_flops_params(cfg, params_struct))

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.common.param import Ax
 from repro.distributed.ctx import shard
 from repro.models.layers import apply_rope, dense, init_dense
+from repro.models.mixer_api import ApplyContext, TokenMixer, register_mixer
 
 NEG_INF = -1e30
 
@@ -233,3 +234,69 @@ def attention_decode_step(
     o = o.reshape(B, H * Dh).astype(x_t.dtype)
     y = dense(params["o"], o)
     return y, {"k": ck, "v": cv, "t": t + 1}
+
+
+# ----------------------------------------------------------- registrations
+
+@register_mixer
+class AttentionMixer(TokenMixer):
+    """Global causal GQA/MHA — the baseline the paper swaps out."""
+
+    name = "attention"
+    attention_free = False
+    subquadratic = False
+
+    def make_config(self, cfg) -> AttentionConfig:
+        return AttentionConfig(
+            d_model=cfg.d_model,
+            n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim,
+            qkv_bias=cfg.qkv_bias,
+            rope_theta=cfg.rope_theta,
+            window=None,
+        )
+
+    def init(self, key, mc):
+        return init_attention(key, mc)
+
+    def apply(self, params, mc, h, ctx: ApplyContext):
+        return apply_attention(params, mc, h, pos_offset=ctx.pos_offset)
+
+    def init_cache(self, mc, batch, max_len, dtype):
+        return init_kv_cache(mc, batch, max_len, dtype)
+
+    def prefill(self, params, mc, h, max_len, dtype, ctx: ApplyContext):
+        return attention_prefill(
+            params, mc, h, max_len, dtype, pos_offset=ctx.pos_offset
+        )
+
+    def decode_step(self, params, mc, h_t, cache):
+        return attention_decode_step(params, mc, h_t, cache)
+
+    def state_bytes(self, cfg, max_len: int) -> int:
+        mc = self.make_config(cfg)
+        size = max_len if mc.window is None else min(mc.window, max_len)
+        # K + V ring buffers (bf16) + int32 write cursor
+        return 2 * size * mc.n_kv_heads * mc.head_dim * 2 + 4
+
+    def flops(self, cfg, L: int) -> float:
+        mc = self.make_config(cfg)
+        D, H, Hkv, Dh = mc.d_model, mc.n_heads, mc.n_kv_heads, mc.head_dim
+        span = L if mc.window is None else min(mc.window, L)
+        proj = 2 * D * H * Dh + 2 * D * Hkv * Dh  # qkvo
+        attn = 2 * span * H * Dh  # QKᵀ + PV (non-param)
+        return 2.0 * L * (proj + attn)
+
+
+@register_mixer
+class LocalAttentionMixer(AttentionMixer):
+    """Sliding-window attention: O(L·window), ring-buffer decode cache."""
+
+    name = "local_attention"
+    subquadratic = True
+
+    def make_config(self, cfg) -> AttentionConfig:
+        return dataclasses.replace(
+            super().make_config(cfg), window=cfg.local_window
+        )

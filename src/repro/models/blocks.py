@@ -2,71 +2,38 @@
 norm → channel mixer (dense MLP / MoE / none) → residual.
 
 Token mixers are pluggable by name — the paper's drop-in-replacement claim
-is realized here: any attention arch runs with ``--mixer hyena``.  Layer
-stacks are built as ``n_groups`` repeats of a ``pattern`` (e.g. Recurrent-
-Gemma's ("rglru", "rglru", "local_attention")), with per-position parameters
-stacked along a leading axis and the stack executed with ``lax.scan`` so
-compile time / HLO size is depth-independent.
+is realized here: any attention arch runs with ``--mixer hyena``.  This
+module contains **zero** mixer-specific dispatch: every mixer operation
+(config, init, apply, cache, prefill, decode) goes through the
+:mod:`repro.models.mixer_api` registry, so registering a new mixer never
+touches this file.  Layer stacks are built as ``n_groups`` repeats of a
+``pattern`` (e.g. RecurrentGemma's ("rglru", "rglru", "local_attention")),
+with per-position parameters stacked along a leading axis and the stack
+executed with ``lax.scan`` so compile time / HLO size is depth-independent.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import filters as HF
-from repro.core.operator import HyenaConfig
-from repro.models import attention as ATT
-from repro.models import hyena as HY
 from repro.models import moe as MOE
-from repro.models import rglru as RG
-from repro.models import ssd as SSD
 from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm
+from repro.models.mixer_api import DEFAULT_CONTEXT, ApplyContext, get_mixer
 
-MIXERS = ("attention", "local_attention", "hyena", "ssd", "rglru")
-
-
-# ------------------------------------------------------------ mixer configs
 
 def mixer_config(cfg: ModelConfig, mixer: str):
-    if mixer in ("attention", "local_attention"):
-        return ATT.AttentionConfig(
-            d_model=cfg.d_model,
-            n_heads=cfg.n_heads,
-            n_kv_heads=cfg.n_kv_heads,
-            head_dim=cfg.head_dim,
-            qkv_bias=cfg.qkv_bias,
-            rope_theta=cfg.rope_theta,
-            window=cfg.local_window if mixer == "local_attention" else None,
-        )
-    if mixer == "hyena":
-        return HyenaConfig(
-            d_model=cfg.d_model,
-            order=cfg.hyena_order,
-            filter=HF.FilterConfig(
-                d_model=cfg.d_model,
-                order=cfg.hyena_order,
-                ffn_width=cfg.hyena_filter_width,
-                ffn_depth=cfg.hyena_filter_depth,
-                pos_dim=cfg.hyena_pos_dim,
-                sine_freq=cfg.hyena_sine_freq,
-                decay_fast=cfg.hyena_decay[0],
-                decay_slow=cfg.hyena_decay[1],
-                max_support=cfg.hyena_max_support,
-            ),
-        )
-    if mixer == "ssd":
-        return SSD.SSDConfig(
-            d_model=cfg.d_model,
-            d_state=cfg.ssm_state or 128,
-            head_dim=cfg.ssd_head_dim,
-            expand=cfg.ssd_expand,
-        )
-    if mixer == "rglru":
-        return RG.RGLRUConfig(d_model=cfg.d_model, d_rnn=cfg.rnn_width)
-    raise ValueError(f"unknown mixer {mixer}")
+    """ModelConfig -> the named mixer's own config (registry delegate)."""
+    return get_mixer(mixer).make_config(cfg)
+
+
+def _moe_config(cfg: ModelConfig) -> "MOE.MoEConfig":
+    return MOE.MoEConfig(
+        d_model=cfg.d_model, d_ff=cfg.d_ff, n_experts=cfg.n_experts,
+        top_k=cfg.top_k, capacity_factor=cfg.capacity_factor, mlp=cfg.mlp,
+    )
 
 
 def _has_channel_mixer(cfg: ModelConfig) -> bool:
@@ -77,52 +44,31 @@ def _has_channel_mixer(cfg: ModelConfig) -> bool:
 
 def init_block(key, cfg: ModelConfig, mixer: str) -> Dict[str, Any]:
     k1, k2 = jax.random.split(key)
-    mc = mixer_config(cfg, mixer)
-    inits = {
-        "attention": ATT.init_attention,
-        "local_attention": ATT.init_attention,
-        "hyena": HY.init_hyena_mixer,
-        "ssd": SSD.init_ssd,
-        "rglru": RG.init_rglru,
-    }
+    m = get_mixer(mixer)
     p: Dict[str, Any] = {
         "norm1": init_norm(cfg.d_model, cfg.norm),
-        "mixer": inits[mixer](k1, mc),
+        "mixer": m.init(k1, m.make_config(cfg)),
     }
     if _has_channel_mixer(cfg):
         p["norm2"] = init_norm(cfg.d_model, cfg.norm)
         if cfg.moe:
-            p["moe"] = MOE.init_moe(
-                k2,
-                MOE.MoEConfig(
-                    d_model=cfg.d_model, d_ff=cfg.d_ff, n_experts=cfg.n_experts,
-                    top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
-                    mlp=cfg.mlp,
-                ),
-            )
+            p["moe"] = MOE.init_moe(k2, _moe_config(cfg))
         else:
             p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp)
     return p
 
 
 def apply_block(
-    params, cfg: ModelConfig, mixer: str, x: jax.Array, *, pos_offset: int = 0,
-    conv_backend: Optional[str] = None,
+    params, cfg: ModelConfig, mixer: str, x: jax.Array,
+    ctx: Optional[ApplyContext] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     from repro.distributed.ctx import shard
 
-    mc = mixer_config(cfg, mixer)
+    ctx = ctx or DEFAULT_CONTEXT
+    m = get_mixer(mixer)
+    mc = m.make_config(cfg)
     h = apply_norm(params["norm1"], x, cfg.norm)
-    if mixer in ("attention", "local_attention"):
-        h = ATT.apply_attention(params["mixer"], mc, h, pos_offset=pos_offset)
-    elif mixer == "hyena":
-        h = HY.apply_hyena_mixer(
-            params["mixer"], mc, h, pos_offset=pos_offset, conv_backend=conv_backend
-        )
-    elif mixer == "ssd":
-        h = SSD.apply_ssd(params["mixer"], mc, h, pos_offset=pos_offset)
-    elif mixer == "rglru":
-        h = RG.apply_rglru(params["mixer"], mc, h, pos_offset=pos_offset)
+    h = m.apply(params["mixer"], mc, h, ctx)
     # pin the sub-layer output to the residual-stream layout *before* the
     # add: row-parallel partial sums then lower to reduce-scatter instead of
     # a full all-reduce (16x fewer bytes at TP=16) — EXPERIMENTS.md §Perf.
@@ -133,15 +79,7 @@ def apply_block(
     if _has_channel_mixer(cfg):
         h = apply_norm(params["norm2"], x, cfg.norm)
         if cfg.moe:
-            h, aux = MOE.apply_moe(
-                params["moe"],
-                MOE.MoEConfig(
-                    d_model=cfg.d_model, d_ff=cfg.d_ff, n_experts=cfg.n_experts,
-                    top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
-                    mlp=cfg.mlp,
-                ),
-                h,
-            )
+            h, aux = MOE.apply_moe(params["moe"], _moe_config(cfg), h)
         else:
             h = apply_mlp(params["mlp"], h, cfg.mlp)
         if h.ndim == 3:
@@ -153,48 +91,25 @@ def apply_block(
 # ------------------------------------------------------------------- cache
 
 def init_block_cache(cfg: ModelConfig, mixer: str, batch: int, max_len: int, dtype):
-    mc = mixer_config(cfg, mixer)
-    if mixer in ("attention", "local_attention"):
-        return ATT.init_kv_cache(mc, batch, max_len, dtype)
-    if mixer == "hyena":
-        return HY.init_hyena_cache(mc, batch, max_len, dtype)
-    if mixer == "ssd":
-        return SSD.init_ssd_cache(mc, batch, max_len, dtype)
-    if mixer == "rglru":
-        return RG.init_rglru_cache(mc, batch, max_len, dtype)
-    raise ValueError(mixer)
+    m = get_mixer(mixer)
+    return m.init_cache(m.make_config(cfg), batch, max_len, dtype)
 
 
 def block_prefill(
     params, cfg: ModelConfig, mixer: str, x: jax.Array, max_len: int,
-    dtype=jnp.bfloat16,
+    dtype=jnp.bfloat16, ctx: Optional[ApplyContext] = None,
 ) -> Tuple[jax.Array, Any]:
     """Full-sequence forward that also returns a populated decode cache."""
-    mc = mixer_config(cfg, mixer)
+    ctx = ctx or DEFAULT_CONTEXT
+    m = get_mixer(mixer)
+    mc = m.make_config(cfg)
     h = apply_norm(params["norm1"], x, cfg.norm)
-    if mixer in ("attention", "local_attention"):
-        h, cache = ATT.attention_prefill(params["mixer"], mc, h, max_len, dtype)
-    elif mixer == "hyena":
-        h, cache = HY.hyena_prefill(params["mixer"], mc, h, max_len, dtype)
-    elif mixer == "ssd":
-        h, cache = SSD.ssd_prefill(params["mixer"], mc, h, max_len, dtype)
-    elif mixer == "rglru":
-        h, cache = RG.rglru_prefill(params["mixer"], mc, h, max_len, dtype)
-    else:
-        raise ValueError(mixer)
+    h, cache = m.prefill(params["mixer"], mc, h, max_len, dtype, ctx)
     x = x + h
     if _has_channel_mixer(cfg):
         h = apply_norm(params["norm2"], x, cfg.norm)
         if cfg.moe:
-            h, _ = MOE.apply_moe(
-                params["moe"],
-                MOE.MoEConfig(
-                    d_model=cfg.d_model, d_ff=cfg.d_ff, n_experts=cfg.n_experts,
-                    top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
-                    mlp=cfg.mlp,
-                ),
-                h,
-            )
+            h, _ = MOE.apply_moe(params["moe"], _moe_config(cfg), h)
         else:
             h = apply_mlp(params["mlp"], h, cfg.mlp)
         x = x + h
@@ -204,29 +119,15 @@ def block_prefill(
 def block_decode(
     params, cfg: ModelConfig, mixer: str, x_t: jax.Array, cache
 ) -> Tuple[jax.Array, Any]:
-    mc = mixer_config(cfg, mixer)
+    m = get_mixer(mixer)
+    mc = m.make_config(cfg)
     h = apply_norm(params["norm1"], x_t, cfg.norm)
-    if mixer in ("attention", "local_attention"):
-        h, cache = ATT.attention_decode_step(params["mixer"], mc, h, cache)
-    elif mixer == "hyena":
-        h, cache = HY.hyena_mixer_decode(params["mixer"], mc, h, cache)
-    elif mixer == "ssd":
-        h, cache = SSD.ssd_decode_step(params["mixer"], mc, h, cache)
-    elif mixer == "rglru":
-        h, cache = RG.rglru_decode_step(params["mixer"], mc, h, cache)
+    h, cache = m.decode_step(params["mixer"], mc, h, cache)
     x_t = x_t + h
     if _has_channel_mixer(cfg):
         h = apply_norm(params["norm2"], x_t, cfg.norm)
         if cfg.moe:
-            h, _ = MOE.apply_moe(
-                params["moe"],
-                MOE.MoEConfig(
-                    d_model=cfg.d_model, d_ff=cfg.d_ff, n_experts=cfg.n_experts,
-                    top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
-                    mlp=cfg.mlp,
-                ),
-                h[:, None, :],
-            )
+            h, _ = MOE.apply_moe(params["moe"], _moe_config(cfg), h[:, None, :])
             h = h[:, 0]
         else:
             h = apply_mlp(params["mlp"], h, cfg.mlp)

@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import filters as F
-from repro.core.fftconv import fft_causal_conv, short_causal_conv
+from repro.core.conv_api import get_conv_backend
+from repro.core.fftconv import short_causal_conv
 from repro.core.operator import (
     HyenaConfig,
     hyena_decode_step,
@@ -23,6 +24,12 @@ from repro.core.operator import (
     precompute_decode_filters,
 )
 from repro.distributed.ctx import shard
+from repro.models.mixer_api import (
+    DEFAULT_CONTEXT,
+    ApplyContext,
+    TokenMixer,
+    register_mixer,
+)
 
 
 def init_hyena_mixer(key, cfg: HyenaConfig) -> Dict[str, Any]:
@@ -30,8 +37,7 @@ def init_hyena_mixer(key, cfg: HyenaConfig) -> Dict[str, Any]:
 
 
 def apply_hyena_mixer(
-    params, cfg: HyenaConfig, x: jax.Array, *, pos_offset: int = 0,
-    conv_backend: Optional[str] = None,
+    params, cfg: HyenaConfig, x: jax.Array, ctx: Optional[ApplyContext] = None
 ) -> jax.Array:
     """(B, L, D) -> (B, L, D), TP over channels.
 
@@ -40,6 +46,7 @@ def apply_hyena_mixer(
     the channel-sharded conv layout with per-tensor all-to-alls is 16× less
     traffic than all-gathering the activation (GBs) — §Perf pair A iter 3.
     """
+    ctx = ctx or DEFAULT_CONTEXT
     B, L, D = x.shape
     N = cfg.order
     z = x @ params["in_proj"]["w"].astype(x.dtype)
@@ -54,23 +61,11 @@ def apply_hyena_mixer(
     xs = [shard(xn, "data", None, "model") for xn in xs]
     h = F.evaluate_filters(params["filters"], cfg.filter, L)  # (N, D, L)
     skip = F.filter_skip(params["filters"], cfg.filter)
-    backend = conv_backend or cfg.conv_backend
+    backend = get_conv_backend(ctx.conv_backend)
+    backend.validate_len(L)
     for n in range(N):
         hn = shard(h[n], "model", None)  # depthwise: channel-sharded filter
-        if backend == "toeplitz":
-            from repro.kernels import ops as kops
-
-            conv = kops.toeplitz_conv(v, hn, skip[n])
-        elif backend == "blockfft":
-            from repro.core.blockfft import blockfft_causal_conv
-
-            conv = blockfft_causal_conv(v, hn, skip[n])
-        elif backend == "fft_local":  # single-device / oracle path
-            conv = fft_causal_conv(v, hn, skip[n])
-        else:  # "fft": shard_map-forced per-chip FFT under a mesh
-            from repro.core.fftconv import fft_causal_conv_sharded
-
-            conv = fft_causal_conv_sharded(v, hn, skip[n])
+        conv = backend(v, hn, skip[n])
         v = xs[n] * conv.astype(x.dtype)
         v = shard(v, "data", None, "model")
     y = v @ params["out_proj"]["w"].astype(x.dtype)
@@ -89,12 +84,18 @@ def hyena_mixer_decode(params, cfg: HyenaConfig, x_t, cache):
 
 def hyena_prefill(
     params, cfg: HyenaConfig, x: jax.Array, max_len: int, dtype=jnp.bfloat16,
-    *, pos_offset: int = 0,
+    *, conv_backend: Optional[str] = None,
 ) -> Tuple[jax.Array, dict]:
     """Full-sequence forward capturing the decode caches: the short-conv
     input history and, per order, the conv *operand* history (newest-first),
-    which is exactly what ``conv_cache_step`` dots against at decode time."""
+    which is exactly what ``conv_cache_step`` dots against at decode time.
+
+    The prompt's long convs run on the ``conv_backend`` registration
+    (default ``fft``); decode steps themselves are cached dots and have no
+    backend dimension."""
+    backend = get_conv_backend(conv_backend)
     B, L, D = x.shape
+    backend.validate_len(L)
     N = cfg.order
     z_pre = x @ params["in_proj"]["w"].astype(x.dtype)
     if "b" in params["in_proj"]:
@@ -119,7 +120,7 @@ def hyena_prefill(
     longs = []
     for n in range(N):
         longs.append(hist(v))
-        conv = fft_causal_conv(v, h_dec[n][:, :L], skip[n])
+        conv = backend(v, h_dec[n][:, :L], skip[n])
         v = xs[n] * conv.astype(x.dtype)
     y = v @ params["out_proj"]["w"].astype(x.dtype)
     if "b" in params["out_proj"]:
@@ -133,3 +134,85 @@ def hyena_prefill(
         "skip": skip,
     })
     return y, cache
+
+
+# ----------------------------------------------------------- registration
+
+@register_mixer
+class HyenaMixer(TokenMixer):
+    """The paper's operator as a drop-in token mixer (Def. 3.1)."""
+
+    name = "hyena"
+    attention_free = True
+    subquadratic = True
+
+    def make_config(self, cfg) -> HyenaConfig:
+        return HyenaConfig(
+            d_model=cfg.d_model,
+            order=cfg.hyena_order,
+            filter=F.FilterConfig(
+                d_model=cfg.d_model,
+                order=cfg.hyena_order,
+                ffn_width=cfg.hyena_filter_width,
+                ffn_depth=cfg.hyena_filter_depth,
+                pos_dim=cfg.hyena_pos_dim,
+                sine_freq=cfg.hyena_sine_freq,
+                decay_fast=cfg.hyena_decay[0],
+                decay_slow=cfg.hyena_decay[1],
+                max_support=cfg.hyena_max_support,
+            ),
+        )
+
+    def init(self, key, mc):
+        return init_hyena_mixer(key, mc)
+
+    def apply(self, params, mc, h, ctx: ApplyContext):
+        return apply_hyena_mixer(params, mc, h, ctx)
+
+    def init_cache(self, mc, batch, max_len, dtype):
+        return init_hyena_cache(mc, batch, max_len, dtype)
+
+    def prefill(self, params, mc, h, max_len, dtype, ctx: ApplyContext):
+        if ctx.pos_offset:
+            # hyena filters are relative-lag functions with no absolute
+            # position handle; a chunked prefill would need operand-history
+            # stitching, which the cache layout does not support yet.
+            raise NotImplementedError(
+                "hyena prefill does not support pos_offset != 0"
+            )
+        return hyena_prefill(
+            params, mc, h, max_len, dtype, conv_backend=ctx.conv_backend
+        )
+
+    def decode_step(self, params, mc, h_t, cache):
+        return hyena_mixer_decode(params, mc, h_t, cache)
+
+    def state_bytes(self, cfg, max_len: int) -> int:
+        mc = self.make_config(cfg)
+        D, N = mc.d_model, mc.order
+        inner = (N + 1) * D
+        short = (mc.short_filter_len - 1) * inner  # projected-input history
+        long = N * max_len * D  # per-order conv operand history
+        # the serving cache (prefill-populated) also carries the fp32 filter
+        # taps on the max_len grid plus the skip gains — batch-independent
+        # but resident per layer, and the same magnitude as ``long``
+        taps = N * D * max_len + N * D
+        return (short + long) * 2 + taps * 4 + 4  # bf16 + fp32 + cursor
+
+    def flops(self, cfg, L: int) -> float:
+        """Paper App. A.2 accounting, ×2 for mul+add."""
+        import math
+
+        mc = self.make_config(cfg)
+        D, N, K = mc.d_model, mc.order, mc.short_filter_len
+        fc = mc.filter
+        proj = (N + 1) * D * D + D * D  # in_proj + out_proj
+        short = (N + 1) * D * K
+        fftconv = 5 * N * D * math.log2(max(L, 2))
+        # implicit filter FFN evaluated on the length-L grid
+        filt = (
+            fc.pos_dim * fc.ffn_width
+            + (fc.ffn_depth - 1) * fc.ffn_width * fc.ffn_width
+            + fc.ffn_width * N * D
+        )
+        return 2.0 * L * (proj + short + fftconv + filt)

@@ -11,6 +11,7 @@ supplied by ``input_specs()`` instead of token embeddings.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -22,8 +23,21 @@ from repro.configs.base import ModelConfig
 from repro.distributed.ctx import shard
 from repro.models import blocks as B
 from repro.models.layers import apply_norm, embed, init_embedding, init_norm, unembed
+from repro.models.mixer_api import DEFAULT_CONTEXT, ApplyContext
 
 IGNORE = -1  # label id excluded from the loss
+
+
+def _mesh_scope(ctx: ApplyContext):
+    """Honor ``ctx.mesh`` as an override of the ambient mesh: inside the
+    scope, every ``shard`` constraint resolves against it."""
+    import contextlib
+
+    from repro.distributed import ctx as dctx
+
+    return dctx.use_mesh(ctx.mesh) if ctx.mesh is not None else (
+        contextlib.nullcontext()
+    )
 
 
 def tail_mixers(cfg: ModelConfig) -> Tuple[str, ...]:
@@ -68,14 +82,23 @@ def forward(
     tokens: jax.Array,  # (B, L) int32
     frontend_embeds: Optional[jax.Array] = None,  # (B, P, D)
     *,
-    pos_offset: int = 0,
-    remat: bool = False,
-    conv_backend: Optional[str] = None,
+    ctx: Optional[ApplyContext] = None,
     compute_dtype=jnp.bfloat16,
-    unroll: bool = False,  # python loop instead of scan (dry-run cost probes)
-    remat_policy: str = "nothing",  # nothing | dots | dots_no_batch
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """Returns (logits (B, L, V), aux losses)."""
+    """Returns (logits (B, L, V), aux losses).
+
+    Execution options — remat(+policy), conv-backend override, layer-loop
+    unrolling, decode position offset, mesh override — arrive in one
+    ``ApplyContext`` instead of per-call kwargs (DESIGN.md §3).
+    """
+    ctx = ctx or DEFAULT_CONTEXT
+    if ctx.mesh is not None:  # re-enter with ctx.mesh as the ambient mesh
+        with _mesh_scope(ctx):
+            return forward(
+                params, cfg, tokens, frontend_embeds,
+                ctx=dataclasses.replace(ctx, mesh=None),
+                compute_dtype=compute_dtype,
+            )
     tokens = shard(tokens, "data", None)
     x = embed(params["embed"], tokens, dtype=compute_dtype)
     if frontend_embeds is not None and cfg.frontend_len:
@@ -93,10 +116,7 @@ def forward(
         x = shard(x, "data", "model", None)
         aux_sum = jnp.zeros((2,), jnp.float32)
         for p, mixer in enumerate(cfg.pattern):
-            x, aux = B.apply_block(
-                group_params[p], cfg, mixer, x, pos_offset=pos_offset,
-                conv_backend=conv_backend,
-            )
+            x, aux = B.apply_block(group_params[p], cfg, mixer, x, ctx)
             if aux:
                 aux_sum = aux_sum + jnp.stack(
                     [aux["moe_load_balance"], aux["moe_z_loss"]]
@@ -105,14 +125,14 @@ def forward(
         return x, aux_sum
 
     body = group_body
-    if remat:
+    if ctx.remat:
         policy = {
             "nothing": jax.checkpoint_policies.nothing_saveable,
             "dots": jax.checkpoint_policies.checkpoint_dots,
             "dots_no_batch": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
-        }[remat_policy]
+        }[ctx.remat_policy]
         body = jax.checkpoint(group_body, policy=policy)
-    if unroll:
+    if ctx.unroll:
         aux_list = []
         n_groups = cfg.n_layers // len(cfg.pattern)
         for g in range(n_groups):
@@ -129,10 +149,7 @@ def forward(
         "moe_z_loss": jnp.sum(aux_stack[:, 1]),
     }
     for i, mixer in enumerate(tail_mixers(cfg)):
-        x, taux = B.apply_block(
-            params["tail"][i], cfg, mixer, x, pos_offset=pos_offset,
-            conv_backend=conv_backend,
-        )
+        x, taux = B.apply_block(params["tail"][i], cfg, mixer, x, ctx)
         for k, v in taux.items():
             aux[k] = aux[k] + v
     x = apply_norm(params["final_norm"], x, cfg.norm)
@@ -146,6 +163,9 @@ def forward(
     return logits, aux
 
 
+TRAIN_CONTEXT = ApplyContext(remat=True)
+
+
 def loss_fn(
     params,
     cfg: ModelConfig,
@@ -153,18 +173,14 @@ def loss_fn(
     labels: jax.Array,  # (B, L), IGNORE = masked
     frontend_embeds: Optional[jax.Array] = None,
     *,
-    remat: bool = True,
+    ctx: Optional[ApplyContext] = None,
     moe_aux_weight: float = 0.01,
     z_loss_weight: float = 1e-4,
-    conv_backend: Optional[str] = None,
     compute_dtype=jnp.bfloat16,
-    unroll: bool = False,
-    remat_policy: str = "nothing",
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     logits, aux = forward(
-        params, cfg, tokens, frontend_embeds, remat=remat,
-        conv_backend=conv_backend, compute_dtype=compute_dtype, unroll=unroll,
-        remat_policy=remat_policy,
+        params, cfg, tokens, frontend_embeds,
+        ctx=ctx or TRAIN_CONTEXT, compute_dtype=compute_dtype,
     )
     logits = logits.astype(jnp.float32)
     mask = (labels != IGNORE).astype(jnp.float32)
@@ -200,9 +216,18 @@ def prefill(
     frontend_embeds: Optional[jax.Array] = None,
     dtype=jnp.bfloat16,
     compute_dtype=None,
+    *,
+    ctx: Optional[ApplyContext] = None,
 ) -> Tuple[jax.Array, Any]:
     """Prompt forward pass returning (logits (B, L, V), populated caches).
     compute_dtype defaults to the cache dtype."""
+    ctx = ctx or DEFAULT_CONTEXT
+    if ctx.mesh is not None:
+        with _mesh_scope(ctx):
+            return prefill(
+                params, cfg, tokens, max_len, frontend_embeds, dtype,
+                compute_dtype, ctx=dataclasses.replace(ctx, mesh=None),
+            )
     compute_dtype = compute_dtype or dtype
     x = embed(params["embed"], tokens, dtype=compute_dtype)
     if frontend_embeds is not None and cfg.frontend_len:
@@ -213,7 +238,9 @@ def prefill(
     def group_body(x, group_params):
         caches = []
         for p, mixer in enumerate(cfg.pattern):
-            x, c = B.block_prefill(group_params[p], cfg, mixer, x, max_len, dtype)
+            x, c = B.block_prefill(
+                group_params[p], cfg, mixer, x, max_len, dtype, ctx
+            )
             caches.append(c)
         return x, tuple(caches)
 
@@ -223,7 +250,9 @@ def prefill(
     if tails:
         tail_caches = []
         for i, mixer in enumerate(tails):
-            x, c = B.block_prefill(params["tail"][i], cfg, mixer, x, max_len, dtype)
+            x, c = B.block_prefill(
+                params["tail"][i], cfg, mixer, x, max_len, dtype, ctx
+            )
             tail_caches.append(c)
         caches["tail"] = tail_caches
     x = apply_norm(params["final_norm"], x, cfg.norm)
@@ -255,9 +284,17 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
 
 def decode_step(
     params, cfg: ModelConfig, token_t: jax.Array, caches,
-    compute_dtype=jnp.bfloat16, unroll: bool = False,
+    compute_dtype=jnp.bfloat16, *, ctx: Optional[ApplyContext] = None,
 ) -> Tuple[jax.Array, Any]:
     """One decode step: token_t (B,) int32 -> (logits (B, V), new caches)."""
+    ctx = ctx or DEFAULT_CONTEXT
+    if ctx.mesh is not None:
+        with _mesh_scope(ctx):
+            return decode_step(
+                params, cfg, token_t, caches, compute_dtype,
+                ctx=dataclasses.replace(ctx, mesh=None),
+            )
+    unroll = ctx.unroll
     x = embed(params["embed"], token_t[:, None], dtype=compute_dtype)[:, 0]  # (B, D)
     x = shard(x, "data", None)
 

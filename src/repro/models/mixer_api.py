@@ -1,0 +1,206 @@
+"""Pluggable TokenMixer API (DESIGN.md §3).
+
+The paper's headline claim is that Hyena is a *drop-in replacement* for
+attention; this module is where that claim is an interface rather than an
+if/elif chain.  A :class:`TokenMixer` bundles everything the block/LM/serve
+layers need from a mixer:
+
+  * ``make_config(cfg)`` — derive the mixer's own config from ``ModelConfig``
+  * ``init(key, mc)`` / ``apply(params, mc, h, ctx)`` — train/prefill forward
+  * ``init_cache`` / ``prefill`` / ``decode_step`` — the serving contract
+  * capability metadata — ``supports_decode``, ``attention_free``,
+    ``subquadratic``, ``state_bytes(cfg, L)``, ``flops(cfg, L)``
+
+plus an :class:`ApplyContext` that replaces the ad-hoc kwarg threading
+(``pos_offset`` / ``conv_backend`` / remat policy) through
+``lm.loss_fn → blocks → hyena → operator``.
+
+Registering a new mixer is one module + one ``@register_mixer`` — zero
+dispatch sites change (``blocks.py`` / ``lm.py`` contain no mixer names).
+The registry conformance suite (tests/test_mixer_registry.py) asserts the
+shared contract over every registration.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Dict, Optional, Tuple
+
+REMAT_POLICIES = ("nothing", "dots", "dots_no_batch")
+REMAT_ENV_VAR = "REPRO_REMAT_POLICY"
+
+
+def resolve_remat_policy(override: Optional[str] = None) -> str:
+    """One resolution point for the remat policy name: explicit ``override``
+    > ``$REPRO_REMAT_POLICY`` > ``"nothing"`` — validated, like
+    :func:`repro.core.conv_api.resolve_conv_backend` for backends."""
+    import os
+
+    name = override or os.environ.get(REMAT_ENV_VAR) or "nothing"
+    if name not in REMAT_POLICIES:
+        raise ValueError(
+            f"unknown remat policy '{name}'; have {REMAT_POLICIES}"
+        )
+    return name
+
+# modules that self-register their mixers on import; loaded lazily so this
+# module stays import-cycle-free (they all import mixer_api back)
+_BUILTIN_MODULES = (
+    "repro.models.attention",
+    "repro.models.hyena",
+    "repro.models.ssd",
+    "repro.models.rglru",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ApplyContext:
+    """Per-call execution context threaded through the model stack.
+
+    One object replaces the scattered kwargs: decode position offset, the
+    long-conv backend override, remat policy, layer-loop unrolling, and an
+    optional mesh handle (``None`` = use the ambient
+    ``repro.distributed.ctx`` mesh).  Hashable and static — jit closes over
+    it, it is never traced.
+
+    Backend strings are validated here, at construction time, so an unknown
+    backend raises before any tracing starts — not mid-forward.
+    """
+
+    pos_offset: int = 0
+    conv_backend: Optional[str] = None  # None -> registry default ("fft")
+    remat: bool = False
+    remat_policy: str = "nothing"
+    unroll: bool = False  # python loop instead of scan (dry-run cost probes)
+    mesh: Any = None
+
+    def __post_init__(self):
+        if self.conv_backend is not None:
+            from repro.core.conv_api import get_conv_backend
+
+            get_conv_backend(self.conv_backend)  # raises with registered list
+        if self.remat_policy not in REMAT_POLICIES:
+            raise ValueError(
+                f"unknown remat policy '{self.remat_policy}'; "
+                f"have {REMAT_POLICIES}"
+            )
+
+
+DEFAULT_CONTEXT = ApplyContext()
+
+
+class TokenMixer:
+    """Interface + capability metadata for a registered token mixer.
+
+    Subclass, set ``name`` (and capability flags), implement the methods,
+    and decorate with :func:`register_mixer`.  ``mc`` below is the object
+    returned by ``make_config`` — opaque to every caller.
+    """
+
+    name: str = ""
+    supports_decode: bool = True
+    # capability flags default to the *least* favorable values: a mixer that
+    # forgets to set them is treated as quadratic dense attention rather than
+    # silently admitted to 500K-token cells (dryrun long_500k gating).
+    attention_free: bool = False  # no dense global KV attention matrix
+    subquadratic: bool = False  # can run 500K-token decode
+
+    # ------------------------------------------------------------ contract
+    def make_config(self, cfg) -> Any:
+        """ModelConfig -> mixer config (opaque to callers)."""
+        raise NotImplementedError
+
+    def init(self, key, mc) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def apply(self, params, mc, h, ctx: ApplyContext):
+        """Full-sequence forward: (B, L, D) -> (B, L, D)."""
+        raise NotImplementedError
+
+    def init_cache(self, mc, batch: int, max_len: int, dtype):
+        """Empty decode cache, directly consumable by ``decode_step``."""
+        raise NotImplementedError
+
+    def prefill(self, params, mc, h, max_len: int, dtype,
+                ctx: ApplyContext) -> Tuple[Any, Any]:
+        """Full-sequence forward that also returns a populated cache."""
+        raise NotImplementedError
+
+    def decode_step(self, params, mc, h_t, cache) -> Tuple[Any, Any]:
+        """One token: (B, D) -> (B, D), updated cache (same treedef)."""
+        raise NotImplementedError
+
+    # ------------------------------------------------------------ metadata
+    def state_bytes(self, cfg, max_len: int) -> int:
+        """Decode-state bytes per sequence (batch 1, bf16 cache) at
+        ``max_len`` — must match ``init_cache`` exactly (conformance-tested)."""
+        raise NotImplementedError
+
+    def flops(self, cfg, L: int) -> float:
+        """Forward FLOPs for one length-L sequence (×2 for mul+add)."""
+        raise NotImplementedError
+
+
+_REGISTRY: Dict[str, TokenMixer] = {}
+_builtins_loaded = False
+
+
+def register_mixer(cls):
+    """Class decorator: instantiate and register under ``cls.name``.
+
+    Duplicate names raise (unless it is the same class re-imported): the
+    registry is the extension point, and silently shadowing e.g. "hyena"
+    would swap the mixer under every config with no warning.
+    """
+    inst = cls()
+    if not inst.name:
+        raise ValueError(f"{cls.__name__} must set a non-empty 'name'")
+    prev = _REGISTRY.get(inst.name)
+    if prev is not None and (
+        type(prev).__module__ != cls.__module__
+        or type(prev).__qualname__ != cls.__qualname__
+    ):
+        raise ValueError(
+            f"mixer '{inst.name}' already registered by "
+            f"{type(prev).__module__}.{type(prev).__qualname__}"
+        )
+    _REGISTRY[inst.name] = inst
+    return cls
+
+
+_builtins_loading = False
+
+
+def _ensure_builtins() -> None:
+    global _builtins_loaded, _builtins_loading
+    if _builtins_loaded or _builtins_loading:
+        return
+    # reentrancy guard only while importing: a builtin module calling
+    # get_mixer() mid-import must not recurse, but a *failed* import leaves
+    # the loaded flag unset so the original ImportError resurfaces on the
+    # next call instead of a misleading "unknown mixer".
+    _builtins_loading = True
+    try:
+        for mod in _BUILTIN_MODULES:
+            importlib.import_module(mod)
+        _builtins_loaded = True
+    finally:
+        _builtins_loading = False
+
+
+def get_mixer(name: str) -> TokenMixer:
+    _ensure_builtins()
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown mixer '{name}'; registered: {sorted(_REGISTRY)}"
+        )
+    return _REGISTRY[name]
+
+
+def registered_mixers() -> Dict[str, TokenMixer]:
+    _ensure_builtins()
+    return dict(_REGISTRY)
+
+
+def mixer_names() -> tuple:
+    return tuple(sorted(registered_mixers()))

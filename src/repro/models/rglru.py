@@ -139,3 +139,52 @@ def rglru_decode_step(params, cfg: RGLRUConfig, x_t: jax.Array, cache):
     y = (h.astype(x_t.dtype)) * g
     y = dense(params["out"], y)
     return y, {"conv": new_conv, "h": h, "t": cache["t"] + 1}
+
+
+# ----------------------------------------------------------- registration
+
+from repro.models.mixer_api import ApplyContext, TokenMixer, register_mixer  # noqa: E402
+
+
+@register_mixer
+class RGLRUMixer(TokenMixer):
+    """Griffin recurrent block: conv + RG-LRU path with a GeLU gate branch."""
+
+    name = "rglru"
+    attention_free = True
+    subquadratic = True
+
+    def make_config(self, cfg) -> RGLRUConfig:
+        return RGLRUConfig(d_model=cfg.d_model, d_rnn=cfg.rnn_width)
+
+    def init(self, key, mc):
+        return init_rglru(key, mc)
+
+    def apply(self, params, mc, h, ctx: ApplyContext):
+        return apply_rglru(params, mc, h, pos_offset=ctx.pos_offset)
+
+    def init_cache(self, mc, batch, max_len, dtype):
+        return init_rglru_cache(mc, batch, max_len, dtype)
+
+    def prefill(self, params, mc, h, max_len, dtype, ctx: ApplyContext):
+        return rglru_prefill(
+            params, mc, h, max_len, dtype, pos_offset=ctx.pos_offset
+        )
+
+    def decode_step(self, params, mc, h_t, cache):
+        return rglru_decode_step(params, mc, h_t, cache)
+
+    def state_bytes(self, cfg, max_len: int) -> int:
+        mc = self.make_config(cfg)
+        W = mc.width
+        conv = (mc.conv_width - 1) * W * 2  # bf16 conv history
+        return conv + W * 4 + 4  # fp32 hidden state + int32 cursor
+
+    def flops(self, cfg, L: int) -> float:
+        mc = self.make_config(cfg)
+        D, W = mc.d_model, mc.width
+        proj = 2 * D * W + W * D  # in_x, in_gate, out
+        gates = 2 * W * W  # gate_a, gate_x
+        conv = W * mc.conv_width
+        scan = 4 * W  # elementwise recurrence
+        return 2.0 * L * (proj + gates + conv + scan)

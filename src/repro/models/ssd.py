@@ -235,3 +235,62 @@ def ssd_decode_step(params, cfg: SSDConfig, x_t: jax.Array, cache):
     g = (g.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6) * (1.0 + params["norm_g"])).astype(x_t.dtype)
     y = dense(params["out_proj"], g)
     return y, {"conv": new_conv, "state": S, "t": cache["t"] + 1}
+
+
+# ----------------------------------------------------------- registration
+
+from repro.models.mixer_api import ApplyContext, TokenMixer, register_mixer  # noqa: E402
+
+
+@register_mixer
+class SSDMixer(TokenMixer):
+    """Mamba-2 state-space duality mixer: O(1) recurrent decode state."""
+
+    name = "ssd"
+    attention_free = True
+    subquadratic = True
+
+    def make_config(self, cfg) -> SSDConfig:
+        return SSDConfig(
+            d_model=cfg.d_model,
+            d_state=cfg.ssm_state or 128,
+            head_dim=cfg.ssd_head_dim,
+            expand=cfg.ssd_expand,
+        )
+
+    def init(self, key, mc):
+        return init_ssd(key, mc)
+
+    def apply(self, params, mc, h, ctx: ApplyContext):
+        return apply_ssd(params, mc, h, pos_offset=ctx.pos_offset)
+
+    def init_cache(self, mc, batch, max_len, dtype):
+        return init_ssd_cache(mc, batch, max_len, dtype)
+
+    def prefill(self, params, mc, h, max_len, dtype, ctx: ApplyContext):
+        return ssd_prefill(
+            params, mc, h, max_len, dtype, pos_offset=ctx.pos_offset
+        )
+
+    def decode_step(self, params, mc, h_t, cache):
+        return ssd_decode_step(params, mc, h_t, cache)
+
+    def state_bytes(self, cfg, max_len: int) -> int:
+        mc = self.make_config(cfg)
+        conv_ch = mc.d_inner + 2 * mc.n_groups * mc.d_state
+        conv = (mc.conv_width - 1) * conv_ch * 2  # bf16 conv history
+        state = mc.n_heads * mc.d_state * mc.head_dim * 4  # fp32 SSM state
+        return conv + state + 4
+
+    def flops(self, cfg, L: int) -> float:
+        mc = self.make_config(cfg)
+        D, di = mc.d_model, mc.d_inner
+        G, N, H, P = mc.n_groups, mc.d_state, mc.n_heads, mc.head_dim
+        Q = min(mc.chunk, L)
+        d_in = 2 * di + 2 * G * N + H
+        conv_ch = di + 2 * G * N
+        proj = D * d_in + di * D
+        conv = conv_ch * mc.conv_width
+        # chunked scan: intra-chunk scores/outputs + inter-chunk state
+        scan = Q * H * N + Q * H * P + 2 * H * N * P
+        return 2.0 * L * (proj + conv + scan)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
+from repro.models.mixer_api import ApplyContext
 from repro.serve.sampling import sample
 
 
@@ -25,11 +26,23 @@ class ServeConfig:
     temperature: float = 0.0
     top_k: int = 0
     cache_dtype: Any = jnp.bfloat16
+    # hyena long-conv backend for the *prefill* pass (decode steps are
+    # cached dots — no long conv to select)
+    conv_backend: Optional[str] = None
+
+    def __post_init__(self):
+        self.apply_context()  # unknown backend names fail here, not on the
+        # first generate() of a deployed server
+
+    def apply_context(self) -> ApplyContext:
+        """Serving's single resolution point for execution options."""
+        return ApplyContext(conv_backend=self.conv_backend)
 
 
-def serve_step(params, cfg: ModelConfig, token, caches):
+def serve_step(params, cfg: ModelConfig, token, caches,
+               ctx: Optional[ApplyContext] = None):
     """(B,) int32 new token -> (logits (B, V), updated caches)."""
-    return lm.decode_step(params, cfg, token, caches)
+    return lm.decode_step(params, cfg, token, caches, ctx=ctx)
 
 
 def generate(
@@ -44,16 +57,17 @@ def generate(
 ) -> jax.Array:
     """Greedy / sampled continuation. Returns (B, max_new_tokens)."""
     key = key if key is not None else jax.random.PRNGKey(0)
+    ctx = scfg.apply_context()
     logits, caches = lm.prefill(
         params, cfg, prompts, scfg.max_len, frontend_embeds,
-        dtype=scfg.cache_dtype,
+        dtype=scfg.cache_dtype, ctx=ctx,
     )
     first = sample(key, logits[:, -1], temperature=scfg.temperature,
                    top_k=scfg.top_k)
 
     def body(carry, k):
         token, caches = carry
-        lg, caches = lm.decode_step(params, cfg, token, caches)
+        lg, caches = lm.decode_step(params, cfg, token, caches, ctx=ctx)
         nxt = sample(k, lg, temperature=scfg.temperature, top_k=scfg.top_k)
         return (nxt, caches), token
 

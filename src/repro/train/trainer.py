@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.distributed.ctx import shard
 from repro.models import lm
+from repro.models.mixer_api import ApplyContext
 from repro.train import optim as O
 
 
@@ -32,6 +33,16 @@ class TrainConfig:
     unroll: bool = False  # python-loop layer stack (dry-run cost probes)
     remat_policy: str = "nothing"  # nothing | dots | dots_no_batch
 
+    def apply_context(self) -> ApplyContext:
+        """The single resolution point for execution options: constructing
+        the context validates the conv backend / remat policy up front."""
+        return ApplyContext(
+            conv_backend=self.conv_backend,
+            remat=self.remat,
+            remat_policy=self.remat_policy,
+            unroll=self.unroll,
+        )
+
 
 def init_train_state(key, cfg: ModelConfig):
     from repro.common.param import split_params
@@ -40,16 +51,13 @@ def init_train_state(key, cfg: ModelConfig):
     return {"params": params, "opt": O.init_adamw(params)}, axes
 
 
-def _loss(params, cfg: ModelConfig, tcfg: TrainConfig, batch):
+def _loss(params, cfg: ModelConfig, tcfg: TrainConfig, ctx: ApplyContext, batch):
     return lm.loss_fn(
         params, cfg, batch["tokens"], batch["labels"],
         batch.get("frontend_embeds"),
-        remat=tcfg.remat,
+        ctx=ctx,
         moe_aux_weight=tcfg.moe_aux_weight,
         z_loss_weight=tcfg.z_loss_weight,
-        conv_backend=tcfg.conv_backend,
-        unroll=tcfg.unroll,
-        remat_policy=tcfg.remat_policy,
     )
 
 
@@ -58,7 +66,10 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
     global batch; microbatching splits B into `microbatches` chunks and
     accumulates grads in fp32 (overlappable reduce per chunk)."""
 
-    grad_fn = jax.value_and_grad(_loss, has_aux=True)
+    ctx = tcfg.apply_context()  # validates backend names before tracing
+    grad_fn = jax.value_and_grad(
+        lambda p, batch: _loss(p, cfg, tcfg, ctx, batch), has_aux=True
+    )
 
     def step(state, batch):
         params = state["params"]
@@ -66,7 +77,7 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
         batch = {k: shard(v, *(["data"] + [None] * (v.ndim - 1))) for k, v in batch.items()}
         n = tcfg.microbatches
         if n == 1:
-            (_, metrics), grads = grad_fn(params, cfg, tcfg, batch)
+            (_, metrics), grads = grad_fn(params, batch)
         else:
             def split(v):
                 B = v.shape[0]
@@ -76,7 +87,7 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
 
             def acc_step(carry, mb):
                 g_acc, m_acc = carry
-                (_, m), g = grad_fn(params, cfg, tcfg, mb)
+                (_, m), g = grad_fn(params, mb)
                 g_acc = jax.tree_util.tree_map(
                     lambda a, b: a + b.astype(jnp.float32), g_acc, g
                 )
@@ -86,8 +97,8 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
             g0 = jax.tree_util.tree_map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params
             )
-            m0 = jax.eval_shape(lambda: grad_fn(params, cfg, tcfg,
-                jax.tree_util.tree_map(lambda v: v[0], micro))[0][1])
+            m0 = jax.eval_shape(lambda: grad_fn(
+                params, jax.tree_util.tree_map(lambda v: v[0], micro))[0][1])
             m0 = jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), m0)
             (grads, msum), _ = jax.lax.scan(acc_step, (g0, m0), micro)
             grads = jax.tree_util.tree_map(lambda g: g / n, grads)

@@ -24,6 +24,7 @@ def test_blockfft_in_hyena_mixer():
     from repro.core import HyenaConfig, FilterConfig
     from repro.core.operator import init_hyena
     from repro.models.hyena import apply_hyena_mixer
+    from repro.models.mixer_api import ApplyContext
 
     cfg = HyenaConfig(
         d_model=16, order=2,
@@ -31,8 +32,10 @@ def test_blockfft_in_hyena_mixer():
     )
     params, _ = split_params(init_hyena(jax.random.PRNGKey(0), cfg))
     u = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 16))
-    y_fft = apply_hyena_mixer(params, cfg, u, conv_backend="fft")
-    y_bl = apply_hyena_mixer(params, cfg, u, conv_backend="blockfft")
+    y_fft = apply_hyena_mixer(params, cfg, u, ApplyContext(conv_backend="fft"))
+    y_bl = apply_hyena_mixer(
+        params, cfg, u, ApplyContext(conv_backend="blockfft")
+    )
     np.testing.assert_allclose(y_fft, y_bl, rtol=2e-3, atol=2e-3)
 
 

@@ -20,12 +20,11 @@ from repro.core import (
 from repro.core.matrices import apply_H, toeplitz
 
 
-def make_op(key, D=16, order=2, L=None, backend="fft"):
+def make_op(key, D=16, order=2, L=None):
     cfg = HyenaConfig(
         d_model=D,
         order=order,
         filter=FilterConfig(d_model=D, order=order, ffn_width=16, pos_dim=9),
-        conv_backend=backend,
     )
     params, _ = split_params(init_hyena(key, cfg))
     return cfg, params
@@ -106,16 +105,22 @@ def test_operator_linear_in_v_given_gates():
 
 
 def test_backends_agree():
-    cfg_f, params = make_op(jax.random.PRNGKey(3), D=8, order=2, backend="fft")
-    cfg_d = HyenaConfig(
-        d_model=8, order=2, filter=cfg_f.filter, conv_backend="direct"
-    )
+    """The conv backend is an execution option (ApplyContext / conv_api
+    registry), not part of the operator's parameter config."""
+    cfg, params = make_op(jax.random.PRNGKey(3), D=8, order=2)
     u = jax.random.normal(jax.random.PRNGKey(5), (2, 16, 8))
     np.testing.assert_allclose(
-        hyena_operator(params, cfg_f, u),
-        hyena_operator(params, cfg_d, u),
+        hyena_operator(params, cfg, u, conv_backend="fft"),
+        hyena_operator(params, cfg, u, conv_backend="direct"),
         rtol=1e-4, atol=1e-4,
     )
+
+
+def test_unknown_backend_raises_before_tracing():
+    cfg, params = make_op(jax.random.PRNGKey(3), D=8, order=2)
+    u = jax.random.normal(jax.random.PRNGKey(5), (2, 16, 8))
+    with pytest.raises(ValueError, match="registered"):
+        hyena_operator(params, cfg, u, conv_backend="cufft")
 
 
 def test_filters_shape_and_grad():

@@ -179,6 +179,7 @@ def test_compressed_psum_accuracy():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.distributed.compression import compressed_psum
+        from repro.distributed.ctx import shard_map
 
         mesh = jax.make_mesh((8,), ("data",))
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
@@ -186,8 +187,8 @@ def test_compressed_psum_accuracy():
         def body(xb):
             return compressed_psum(xb, "data")
 
-        fn = jax.shard_map(body, mesh=mesh, in_specs=P("data"),
-                               out_specs=P("data"))
+        fn = shard_map(body, mesh=mesh, in_specs=P("data"),
+                       out_specs=P("data"))
         got = fn(x)[0]
         want = jnp.sum(x, axis=0)
         err = np.abs(np.asarray(got) - np.asarray(want)).max()

@@ -99,7 +99,8 @@ def test_microbatch_equals_full_batch_grads():
     tokens, labels = synthetic.majority(rng, n=8, seq_len=16, vocab=8)
     state, _ = init_train_state(jax.random.PRNGKey(0), cfg)
     p = state["params"]
-    loss = lambda p, t, l: lm.loss_fn(p, cfg, t, l, remat=False)[0]
+    from repro.models.mixer_api import ApplyContext
+    loss = lambda p, t, l: lm.loss_fn(p, cfg, t, l, ctx=ApplyContext())[0]
     g_full = jax.grad(loss)(p, jnp.asarray(tokens), jnp.asarray(labels))
     g_a = jax.grad(loss)(p, jnp.asarray(tokens[:4]), jnp.asarray(labels[:4]))
     g_b = jax.grad(loss)(p, jnp.asarray(tokens[4:]), jnp.asarray(labels[4:]))
