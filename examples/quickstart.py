@@ -2,6 +2,12 @@
 and sample a continuation.
 
     PYTHONPATH=src python examples/quickstart.py [--steps 30]
+
+The single static ``generate()`` call below is the simplest serving path.
+For concurrent requests with mixed lengths, per-request sampling params,
+and per-token streaming callbacks, use the continuous-batching API —
+``repro.serve.engine.ServeEngine.submit()/step()/drain()`` — shown in
+``examples/serve_batched.py`` (architecture in DESIGN.md §4).
 """
 import argparse
 import dataclasses

@@ -1,5 +1,11 @@
-"""Batched serving demo: prefill a batch of prompts, decode continuations
-with the per-mixer caches (Hyena conv-cache / KV ring buffers / SSM state).
+"""Continuous-batching serving demo: submit prompts with *different*
+lengths, horizons, and sampling params to a ``ServeEngine`` slot pool and
+stream tokens as they are emitted.
+
+Each request owns its slot only while it is generating — a finished
+request's slot is reset and immediately refilled from the admission queue,
+so mixed traffic never pays for its slowest member (compare
+``benchmarks/bench_serving.py`` against the old padded static batch).
 
     PYTHONPATH=src python examples/serve_batched.py --arch hyena-153m
 """
@@ -8,20 +14,20 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.common.param import split_params
 from repro.configs import get_config
 from repro.data import tokenizer
 from repro.models import lm
-from repro.serve.engine import ServeConfig, generate
+from repro.serve.engine import ServeConfig, ServeEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="hyena-153m")
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--temperature", type=float, default=0.8)
     args = ap.parse_args()
 
@@ -36,22 +42,38 @@ def main():
         "hyena operators are",
         "subquadratic models",
     ]
-    enc = [tokenizer.encode(p, add_bos=False) for p in prompts]
-    width = max(len(e) for e in enc)
-    batch = np.stack([np.pad(e, (width - len(e), 0)) for e in enc])
-
-    scfg = ServeConfig(max_len=width + args.new_tokens + 1,
-                       temperature=args.temperature, top_k=8)
-    t0 = time.time()
-    out = generate(
-        params, cfg, jnp.asarray(batch), scfg=scfg,
-        max_new_tokens=args.new_tokens, key=jax.random.PRNGKey(7),
+    max_prompt = max(len(tokenizer.encode(p, add_bos=False)) for p in prompts)
+    scfg = ServeConfig(
+        max_len=max_prompt + args.new_tokens + 1, n_slots=args.slots,
+        temperature=args.temperature, top_k=8,
     )
+    eng = ServeEngine(params, cfg, scfg, seed=7)
+
+    streamed = {}
+
+    def on_token(rid, token, done):
+        streamed.setdefault(rid, []).append(token)
+
+    t0 = time.time()
+    rids = {}
+    for i, p in enumerate(prompts):
+        enc = np.asarray(tokenizer.encode(p, add_bos=False))
+        # per-request params: even requests greedy, odd ones sampled
+        rids[eng.submit(
+            enc, max_new_tokens=args.new_tokens,
+            temperature=0.0 if i % 2 == 0 else args.temperature,
+            stream=on_token,
+        )] = p
+    out = eng.drain()
     dt = time.time() - t0
-    toks = out.shape[0] * out.shape[1]
-    for p, o in zip(prompts, np.asarray(out)):
-        print(f"  {p!r} -> {tokenizer.decode(o)!r}")
-    print(f"{toks} tokens in {dt:.1f}s ({toks / dt:.1f} tok/s, batch={len(prompts)})")
+
+    toks = 0
+    for rid, p in rids.items():
+        assert streamed[rid] == [int(t) for t in out[rid]]  # stream == drain
+        toks += len(out[rid])
+        print(f"  {p!r} -> {tokenizer.decode(np.asarray(out[rid]))!r}")
+    print(f"{toks} tokens in {dt:.1f}s ({toks / dt:.1f} tok/s, "
+          f"slots={args.slots}, requests={len(prompts)})")
     print("OK")
 
 

@@ -3,7 +3,7 @@ own Hyena LMs (Table A.4).  One ``--arch <id>`` per entry.
 
 Every attention arch additionally supports the paper's drop-in swap via
 ``ModelConfig.with_mixer("hyena")`` (used for the `long_500k` cells of pure
-full-attention archs — see DESIGN.md §4).
+full-attention archs — see DESIGN.md §5).
 """
 from __future__ import annotations
 

@@ -28,9 +28,20 @@ import jax.numpy as jnp
 
 
 def _factor(N: int) -> Tuple[int, int]:
-    R = 1 << math.ceil(math.log2(math.sqrt(N)))
-    while N % R:
+    """N = R·S with R preferring the MXU-friendly power-of-two near √N.
+
+    The four-step identity holds for ANY factorization, so when N's
+    power-of-two part is small (odd / prime conv lengths pad to N = 2L
+    with L odd) we fall back to the largest divisor ≤ √N instead of
+    doubling R past N forever (the pre-fix behavior hung on prime L —
+    caught by tests/test_conv_backends_prop.py).
+    """
+    R = 1 << max(math.ceil(math.log2(math.sqrt(N))), 0)
+    while R <= N and N % R:
         R *= 2
+    if R <= N and N % R == 0:
+        return R, N // R
+    R = max(r for r in range(1, math.isqrt(N) + 1) if N % r == 0)
     return R, N // R
 
 

@@ -134,7 +134,8 @@ def init_decode_cache(cfg: HyenaConfig, batch: int, max_len: int, dtype=jnp.bflo
     return {
         "short": jnp.zeros((batch, cfg.short_filter_len - 1, inner), dtype),
         "long": jnp.zeros((N, batch, max_len, D), dtype),
-        "t": jnp.zeros((), jnp.int32),
+        # per-row position counter (continuous batching: one request per row)
+        "t": jnp.zeros((batch,), jnp.int32),
     }
 
 

@@ -9,7 +9,7 @@ logical-axes tree to NamedShardings with:
     (ZeRO-3 — required to fit 72B/132B optimizer states on 256 chips).
 
 Activation sharding is *not* rule-driven — step functions place explicit
-``ctx.shard`` constraints (DESIGN.md §5).
+``ctx.shard`` constraints (DESIGN.md §6).
 """
 from __future__ import annotations
 

@@ -21,7 +21,7 @@ Per cell this produces artifacts/dryrun/<mesh>/<arch>__<shape>.json with:
     extrapolation), split by op kind,
   * MODEL_FLOPS = 6·N·D (6·N_active·D for MoE) for the useful-compute ratio.
 
-Cell policy (DESIGN.md §4): `long_500k` needs sub-quadratic attention —
+Cell policy (DESIGN.md §5): `long_500k` needs sub-quadratic attention —
 mamba2/recurrentgemma run natively; pure full-attention archs run the cell
 with the paper's drop-in swap (`--mixer hyena`, marked "hyena-swap").
 """
@@ -286,6 +286,8 @@ def compile_cell(cfg, shape_name: str, mesh: Mesh, *, unroll=False,
     dt = time.time() - t0
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):  # jax<0.5 returns a one-dict list per device
+        cost = cost[0] if cost else {}
     out = {
         "compile_s": round(dt, 2),
         "memory": {

@@ -5,7 +5,7 @@ single-chip version), and KV-cache decode.
 
 Activation sharding (under a mesh): batch → data; queries → model (context
 parallelism) for long sequences; KV replicated across model (each device
-scans the full key space for its query shard).  See DESIGN.md §5.
+scans the full key space for its query shard).  See DESIGN.md §6.
 """
 from __future__ import annotations
 
@@ -186,7 +186,7 @@ def attention_prefill(
         slots = (jnp.arange(L - n, L)) % size
         ck = cache["k"].at[:, slots].set(k[:, L - n :].astype(dtype))
         cv = cache["v"].at[:, slots].set(v[:, L - n :].astype(dtype))
-    return y, {"k": ck, "v": cv, "t": jnp.asarray(L, jnp.int32)}
+    return y, {"k": ck, "v": cv, "t": jnp.full((B,), L, jnp.int32)}
 
 
 def init_kv_cache(cfg: AttentionConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
@@ -194,7 +194,9 @@ def init_kv_cache(cfg: AttentionConfig, batch: int, max_len: int, dtype=jnp.bflo
     return {
         "k": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.head_dim), dtype),
         "v": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.head_dim), dtype),
-        "t": jnp.zeros((), jnp.int32),
+        # per-slot write cursor: under continuous batching every batch row
+        # is an independent request at its own sequence position
+        "t": jnp.zeros((batch,), jnp.int32),
     }
 
 
@@ -202,33 +204,31 @@ def attention_decode_step(
     params, cfg: AttentionConfig, x_t: jax.Array, cache: Dict[str, Any]
 ) -> Tuple[jax.Array, Dict[str, Any]]:
     """One token. x_t: (B, D). Sliding-window caches are rolling buffers of
-    size `window`; global caches are length `max_len` with a write cursor."""
+    size `window`; global caches are length `max_len` with a write cursor.
+    The cursor ``t`` is per batch row, so a continuous-batching pool can
+    decode slots sitting at different positions in one step."""
     B, D = x_t.shape
     H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    t = cache["t"]
+    t = cache["t"]  # (B,)
     q = dense(params["q"], x_t).reshape(B, 1, H, Dh)
     k = dense(params["k"], x_t).reshape(B, 1, Hkv, Dh)
     v = dense(params["v"], x_t).reshape(B, 1, Hkv, Dh)
-    pos = t[None].astype(jnp.int32)
+    pos = t[:, None].astype(jnp.int32)  # (B, 1) one position per row
     q = apply_rope(q, pos, cfg.rope_theta)
     k = apply_rope(k, pos, cfg.rope_theta)
     size = cache["k"].shape[1]
-    if cfg.window is None:
-        slot = t % size
-        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
-        valid = jnp.arange(size) <= t
-    else:
-        # rolling ring buffer for sliding window
-        slot = t % size
-        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
-        ages = (t - jnp.arange(size)) % size  # 0 = newest
-        valid = (jnp.arange(size) <= t) & (ages < cfg.window)
+    slot = t % size  # (B,)
+    rows = jnp.arange(B)
+    ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
+    valid = jnp.arange(size)[None, :] <= t[:, None]  # (B, size)
+    if cfg.window is not None:
+        ages = (t[:, None] - jnp.arange(size)[None, :]) % size  # 0 = newest
+        valid = valid & (ages < cfg.window)
     G = H // Hkv
     qg = q.reshape(B, Hkv, G, Dh).astype(jnp.float32) / math.sqrt(Dh)
     s = jnp.einsum("bhgd,bshd->bhgs", qg, ck.astype(jnp.float32))
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgs,bshd->bhgd", p, cv.astype(jnp.float32))
     o = o.reshape(B, H * Dh).astype(x_t.dtype)

@@ -2,7 +2,7 @@
 
 Thin adapter over :mod:`repro.core.operator` adding activation-sharding
 constraints: Hyena's long conv is depthwise, so tensor parallelism over the
-channel dim is collective-free inside the operator (DESIGN.md §5); the only
+channel dim is collective-free inside the operator (DESIGN.md §6); the only
 TP collectives are the in/out projections' (same as Megatron attention).
 """
 from __future__ import annotations
@@ -129,7 +129,7 @@ def hyena_prefill(
     cache.update({
         "short": short_hist,
         "long": jnp.stack(longs),
-        "t": jnp.asarray(L, jnp.int32),
+        "t": jnp.full((B,), L, jnp.int32),
         "h": h_dec,
         "skip": skip,
     })
@@ -186,6 +186,12 @@ class HyenaMixer(TokenMixer):
 
     def decode_step(self, params, mc, h_t, cache):
         return hyena_mixer_decode(params, mc, h_t, cache)
+
+    def cache_slot_axes(self, mc) -> dict:
+        # "long" stacks the per-order operand histories ahead of the batch
+        # dim; the decode filter taps "h"/"skip" depend only on params and
+        # the max_len grid, so the pool shares one copy across slots.
+        return {"long": 1, "h": -1, "skip": -1}
 
     def state_bytes(self, cfg, max_len: int) -> int:
         mc = self.make_config(cfg)

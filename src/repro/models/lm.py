@@ -282,6 +282,105 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     return caches
 
 
+# ----------------------------------------------------- cache slot pooling
+#
+# Continuous-batching serving (repro.serve) keeps ONE pooled cache tree
+# whose batch dim is a fixed pool of request slots.  The helpers below lift
+# the per-mixer slot contract (TokenMixer.cache_slot_axes / cache_slice /
+# cache_insert / cache_reset) over the full LM cache structure
+# ``{"groups": [stacked per-pattern trees], "tail": [per-layer trees]}`` —
+# group caches are lax.scan-stacked, so their slot axis is the mixer's
+# axis + 1.  All ops are pure functions of (pool, slot) and jit-compatible
+# (``slot`` may be traced).
+
+
+def cache_slot_axes(cfg: ModelConfig, caches) -> Dict[str, Any]:
+    """Pytree of ints matching ``caches``: slot axis per leaf, -1 = shared
+    across slots (e.g. hyena's decode filter taps)."""
+    from repro.models.mixer_api import get_mixer
+
+    def axes_for(mixer: str, cache, shift: int):
+        m = get_mixer(mixer)
+        spec = m.cache_slot_axes(m.make_config(cfg))
+        return {
+            k: (-1 if spec.get(k, 0) < 0 else spec.get(k, 0) + shift)
+            for k in cache
+        }
+
+    axes: Dict[str, Any] = {
+        "groups": [
+            axes_for(mx, caches["groups"][p], 1)
+            for p, mx in enumerate(cfg.pattern)
+        ]
+    }
+    if "tail" in caches:
+        axes["tail"] = [
+            axes_for(mx, caches["tail"][i], 0)
+            for i, mx in enumerate(tail_mixers(cfg))
+        ]
+    return axes
+
+
+def make_slot_pool(cfg: ModelConfig, one_cache, n_slots: int):
+    """Expand a single-request cache (e.g. the first prefill's, batch 1)
+    into an ``n_slots``-wide zeroed pool; shared leaves keep one copy.
+
+    Shared leaves are *copied*, not aliased: the pool is buffer-donated
+    through every jitted update, and the very first insert passes the same
+    prefill cache as a non-donated argument — donating a buffer that is
+    simultaneously another live input is illegal on GPU/TPU.
+    """
+    axes = cache_slot_axes(cfg, one_cache)
+
+    def expand(ax, leaf):
+        if ax < 0:
+            return jnp.array(leaf)  # fresh buffer (donation-safe)
+        shape = list(leaf.shape)
+        shape[ax] = n_slots
+        return jnp.zeros(tuple(shape), leaf.dtype)
+
+    return jax.tree_util.tree_map(expand, axes, one_cache)
+
+
+def slot_insert(cfg: ModelConfig, caches, slot, one):
+    """Scatter a batch-1 cache (fresh prefill) into ``slot`` of the pool.
+    Shared leaves take the incoming value (identical for every request)."""
+    from repro.models.mixer_api import slot_insert_leaf
+
+    axes = cache_slot_axes(cfg, caches)
+    return jax.tree_util.tree_map(
+        lambda ax, pool, new: slot_insert_leaf(pool, new, slot, ax),
+        axes, caches, one,
+    )
+
+
+def slot_reset(cfg: ModelConfig, caches, slot):
+    """Zero one slot across every per-slot leaf — pure function, so an
+    evicted request's state cannot leak into the slot's next occupant."""
+    from repro.models.mixer_api import slot_zero_leaf
+
+    axes = cache_slot_axes(cfg, caches)
+    return jax.tree_util.tree_map(
+        lambda ax, leaf: slot_zero_leaf(leaf, slot, ax), axes, caches
+    )
+
+
+def mask_slots(cfg: ModelConfig, new_caches, old_caches, active: jax.Array):
+    """Slot-masked cache update: keep ``new`` where ``active`` (bool (S,)),
+    freeze ``old`` elsewhere.  Applied after a pooled decode step so free
+    slots hold exactly their reset state (scheduler invariant I3)."""
+    axes = cache_slot_axes(cfg, new_caches)
+
+    def pick(ax, new, old):
+        if ax < 0:
+            return new
+        shape = [1] * new.ndim
+        shape[ax] = active.shape[0]
+        return jnp.where(active.reshape(shape), new, old)
+
+    return jax.tree_util.tree_map(pick, axes, new_caches, old_caches)
+
+
 def decode_step(
     params, cfg: ModelConfig, token_t: jax.Array, caches,
     compute_dtype=jnp.bfloat16, *, ctx: Optional[ApplyContext] = None,

@@ -130,6 +130,54 @@ class TokenMixer:
         """One token: (B, D) -> (B, D), updated cache (same treedef)."""
         raise NotImplementedError
 
+    # ------------------------------------------------- cache slot contract
+    # (leaf ops shared with repro.models.lm's pooled-tree variants live at
+    # module level below: slot_slice_leaf / slot_insert_leaf / slot_zero_leaf)
+    #
+    # Continuous-batching serving keeps one pooled cache whose batch dim is
+    # a fixed pool of request *slots*; admission scatters a freshly
+    # prefilled single-request cache into a free slot and completion /
+    # eviction zeroes it.  The three ops below are derived generically from
+    # ``cache_slot_axes`` — a mixer only overrides the spec when a cache
+    # leaf's slot dim is not axis 0 (hyena's stacked per-order operand
+    # history) or when a leaf is request-independent and shared across the
+    # pool (hyena's filter taps).  Decode caches are flat ``str -> array``
+    # dicts; the registry conformance suite asserts the spec covers every
+    # key produced by ``init_cache`` and ``prefill``.
+
+    def cache_slot_axes(self, mc) -> Dict[str, int]:
+        """Slot (batch) axis per cache key.  Missing keys default to axis
+        0; ``-1`` marks a leaf shared across slots (never sliced/reset)."""
+        return {}
+
+    def cache_slice(self, mc, cache, slot):
+        """Gather one slot: pooled cache -> batch-1 cache (same treedef).
+        ``slot`` may be a traced int32 — the op is jit-compatible."""
+        axes = self.cache_slot_axes(mc)
+        return {
+            k: slot_slice_leaf(v, slot, axes.get(k, 0))
+            for k, v in cache.items()
+        }
+
+    def cache_insert(self, mc, cache, slot, one):
+        """Scatter a batch-1 cache (e.g. from a fresh prefill) into ``slot``
+        of the pooled cache.  Shared leaves take the incoming value — it is
+        identical for every request (same params, same max_len grid)."""
+        axes = self.cache_slot_axes(mc)
+        return {
+            k: slot_insert_leaf(v, one[k], slot, axes.get(k, 0))
+            for k, v in cache.items()
+        }
+
+    def cache_reset(self, mc, cache, slot):
+        """Zero one slot (pure function) so an evicted request's state
+        cannot leak into the slot's next occupant."""
+        axes = self.cache_slot_axes(mc)
+        return {
+            k: slot_zero_leaf(v, slot, axes.get(k, 0))
+            for k, v in cache.items()
+        }
+
     # ------------------------------------------------------------ metadata
     def state_bytes(self, cfg, max_len: int) -> int:
         """Decode-state bytes per sequence (batch 1, bf16 cache) at
@@ -139,6 +187,45 @@ class TokenMixer:
     def flops(self, cfg, L: int) -> float:
         """Forward FLOPs for one length-L sequence (×2 for mul+add)."""
         raise NotImplementedError
+
+
+# ------------------------------------------------------ slot-contract leaf ops
+#
+# The single implementation of per-leaf slot slice / insert / zero, used by
+# both the TokenMixer.cache_* methods (flat per-layer caches) and the
+# lm-level pooled-tree variants (repro.models.lm.slot_insert et al., where
+# scan-stacked group caches shift the slot axis by one).  ``axis < 0`` marks
+# a leaf shared across slots: never sliced, inserted over wholesale, never
+# reset.  ``slot`` may be a traced int32 — everything is jit-compatible.
+
+def slot_slice_leaf(leaf, slot, axis: int):
+    import jax
+
+    if axis < 0:
+        return leaf
+    return jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis)
+
+
+def slot_insert_leaf(leaf, new, slot, axis: int):
+    import jax
+
+    if axis < 0:
+        return new.astype(leaf.dtype)
+    return jax.lax.dynamic_update_slice_in_dim(
+        leaf, new.astype(leaf.dtype), slot, axis
+    )
+
+
+def slot_zero_leaf(leaf, slot, axis: int):
+    import jax
+    import jax.numpy as jnp
+
+    if axis < 0:
+        return leaf
+    sl = jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis)
+    return jax.lax.dynamic_update_slice_in_dim(
+        leaf, jnp.zeros_like(sl), slot, axis
+    )
 
 
 _REGISTRY: Dict[str, TokenMixer] = {}

@@ -105,7 +105,7 @@ def rglru_prefill(
     n = min(L, K - 1)
     hist = jnp.flip(u_raw[:, L - n :], axis=1).astype(dtype)
     hist = jnp.pad(hist, ((0, 0), (0, K - 1 - n), (0, 0)))
-    cache = {"conv": hist, "h": h_last, "t": jnp.asarray(L, jnp.int32)}
+    cache = {"conv": hist, "h": h_last, "t": jnp.full((B,), L, jnp.int32)}
     return out, cache
 
 
@@ -114,7 +114,7 @@ def init_rglru_cache(cfg: RGLRUConfig, batch: int, max_len: int, dtype=jnp.bfloa
     return {
         "conv": jnp.zeros((batch, cfg.conv_width - 1, W), dtype),
         "h": jnp.zeros((batch, W), jnp.float32),
-        "t": jnp.zeros((), jnp.int32),
+        "t": jnp.zeros((batch,), jnp.int32),
     }
 
 

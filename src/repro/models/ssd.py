@@ -186,7 +186,7 @@ def ssd_prefill(
     n = min(L, K - 1)
     hist = jnp.flip(xbc_raw[:, L - n :], axis=1).astype(dtype)
     hist = jnp.pad(hist, ((0, 0), (0, K - 1 - n), (0, 0)))
-    cache = {"conv": hist, "state": S, "t": jnp.asarray(L, jnp.int32)}
+    cache = {"conv": hist, "state": S, "t": jnp.full((B,), L, jnp.int32)}
     return out, cache
 
 
@@ -197,7 +197,7 @@ def init_ssd_cache(cfg: SSDConfig, batch: int, max_len: int, dtype=jnp.bfloat16)
         "state": jnp.zeros(
             (batch, cfg.n_heads, cfg.d_state, cfg.head_dim), jnp.float32
         ),
-        "t": jnp.zeros((), jnp.int32),
+        "t": jnp.zeros((batch,), jnp.int32),
     }
 
 

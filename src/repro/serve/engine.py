@@ -1,6 +1,24 @@
-"""Batched serving engine: prefill → jitted decode loop over per-mixer
-caches (KV ring buffers for attention, O(L) conv cache for Hyena, O(1)
-recurrent state for SSD / RG-LRU).
+"""Serving engines over the per-mixer caches (KV ring buffers for
+attention, O(L) conv cache for Hyena, O(1) recurrent state for SSD /
+RG-LRU).
+
+Two tiers (DESIGN.md §4):
+
+  * :func:`generate` — the static-batch path: every request in the batch
+    shares one prompt length and one decode horizon.  Kept as the
+    sequential *reference semantics* (the property harness asserts the
+    continuous engine's greedy outputs are token-identical to it) and as
+    the baseline ``benchmarks/bench_serving.py`` measures against.
+  * :class:`ServeEngine` — continuous batching: an admission queue feeds a
+    fixed pool of cache *slots*; each step interleaves prefill-into-free-
+    slots with a single jitted decode step over the whole pool.  Requests
+    carry their own sampling params (temperature / top_k / stop tokens),
+    horizons, and streaming callbacks; slots are scattered/gathered through
+    the TokenMixer cache-slot contract (``cache_slot_axes`` et al.).
+
+Hyena's O(L) conv cache and the SSD/RG-LRU O(1) recurrent state make the
+per-slot swap far cheaper than attention KV paging: inserting a slot moves
+one operand history (or a single state vector), never a paged KV table.
 
 ``serve_step`` — one new token against a populated cache — is exactly what
 the multi-pod dry-run lowers for the ``decode_32k`` / ``long_500k`` cells.
@@ -9,22 +27,30 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
-from repro.models.mixer_api import ApplyContext
-from repro.serve.sampling import sample
+from repro.models.mixer_api import ApplyContext, get_mixer
+from repro.serve.sampling import sample, sample_slots
+from repro.serve.scheduler import Backend, Request, SamplingParams, Scheduler
 
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     max_len: int
-    temperature: float = 0.0
+    temperature: float = 0.0  # default for requests that don't override
     top_k: int = 0
+    n_slots: int = 4  # continuous-batching slot-pool width
+    # decode steps fused into one jitted lax.scan per scheduler tick:
+    # amortizes per-token host dispatch; slots are admitted/released only at
+    # quantum boundaries (a request finishing mid-quantum has its surplus
+    # tokens discarded, so outputs stay token-identical to quantum=1)
+    decode_quantum: int = 1
     cache_dtype: Any = jnp.bfloat16
     # hyena long-conv backend for the *prefill* pass (decode steps are
     # cached dots — no long conv to select)
@@ -33,6 +59,12 @@ class ServeConfig:
     def __post_init__(self):
         self.apply_context()  # unknown backend names fail here, not on the
         # first generate() of a deployed server
+        if self.n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {self.n_slots}")
+        if self.decode_quantum < 1:
+            raise ValueError(
+                f"decode_quantum must be >= 1, got {self.decode_quantum}"
+            )
 
     def apply_context(self) -> ApplyContext:
         """Serving's single resolution point for execution options."""
@@ -45,6 +77,18 @@ def serve_step(params, cfg: ModelConfig, token, caches,
     return lm.decode_step(params, cfg, token, caches, ctx=ctx)
 
 
+# ------------------------------------------------------------- PRNG streams
+#
+# Every request owns a deterministic key stream indexed by (base seed, rid,
+# token index), so sampled outputs are a pure function of the request — not
+# of the slot it landed in, the pool composition, or eviction timing.
+
+def request_token_key(base_key, rid, token_index):
+    return jax.random.fold_in(jax.random.fold_in(base_key, rid), token_index)
+
+
+# ---------------------------------------------------------- static batching
+
 def generate(
     params,
     cfg: ModelConfig,
@@ -55,7 +99,10 @@ def generate(
     frontend_embeds: Optional[jax.Array] = None,
     key=None,
 ) -> jax.Array:
-    """Greedy / sampled continuation. Returns (B, max_new_tokens)."""
+    """Greedy / sampled continuation. Returns (B, max_new_tokens).
+
+    Static batch: one prompt length, one horizon, one sampling config for
+    the whole batch — the padded baseline ``ServeEngine`` improves on."""
     key = key if key is not None else jax.random.PRNGKey(0)
     ctx = scfg.apply_context()
     logits, caches = lm.prefill(
@@ -67,10 +114,328 @@ def generate(
 
     def body(carry, k):
         token, caches = carry
-        lg, caches = lm.decode_step(params, cfg, token, caches, ctx=ctx)
+        lg, caches = lm.decode_step(
+            params, cfg, token, caches, compute_dtype=scfg.cache_dtype,
+            ctx=ctx,
+        )
         nxt = sample(k, lg, temperature=scfg.temperature, top_k=scfg.top_k)
         return (nxt, caches), token
 
     keys = jax.random.split(key, max_new_tokens)
     (_, _), tokens = jax.lax.scan(body, (first, caches), keys)
     return tokens.T  # (B, T)
+
+
+# ------------------------------------------------------ continuous batching
+#
+# The jitted workers are module-level so the jax.jit cache is shared across
+# ServeEngine instances (per (cfg, ctx, dtype, shape) — not per engine).
+# The pool is donated through every jitted update (decode / insert / reset):
+# the engine never touches the previous pool again, so XLA can update the
+# cache buffers in place instead of doubling the serving high-water mark.
+# CPU ignores donation, so the donating wrappers are built lazily on first
+# use (jax.default_backend() at import time would force backend init as an
+# import side effect) and gated to avoid the unused-donation warning.
+
+
+@functools.lru_cache(maxsize=1)
+def _donate_pool_args() -> bool:
+    return jax.default_backend() != "cpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "ctx", "dtype", "max_len")
+)
+def _prefill_and_sample(
+    params, prompt, temp, topk, rid, count, base_key,
+    *, cfg: ModelConfig, ctx: ApplyContext, dtype, max_len: int,
+):
+    """Prefill one request (batch 1) and sample its first token with the
+    request's own key stream.  Returns (token (), cache).
+
+    NOTE: jit specializes on the exact prompt length, so a server seeing
+    unbounded distinct lengths accumulates one compile per length.  Length
+    bucketing is NOT a drop-in fix: left-padding would feed pad tokens into
+    the conv / recurrent mixer states (only attention can mask them), so a
+    bounded-compile prefill needs per-mixer pad masking first."""
+    logits, cache = lm.prefill(
+        params, cfg, prompt, max_len, dtype=dtype, compute_dtype=dtype,
+        ctx=ctx,
+    )
+    key = request_token_key(base_key, rid, count)
+    tok = sample_slots(key[None], logits[:, -1], temp, topk)
+    return tok[0], cache
+
+
+def _decode_and_sample_impl(
+    params, tokens, caches, active, temps, topks, rids, counts, base_key,
+    *, cfg: ModelConfig, ctx: ApplyContext, dtype, quantum: int,
+    sampled: bool, truncated: bool,
+):
+    """``quantum`` slot-masked decode steps over the whole pool (one fused
+    lax.scan) + per-slot sampling.  Returns tokens (quantum, S) and the
+    final caches.
+
+    Inactive slots run the same XLA program (static shapes) but their cache
+    update is masked out, keeping free slots exactly at their reset state.
+    Sampling keys derive from (rid, token index), so the emitted stream is
+    independent of the quantum size and of pool composition.  ``sampled``
+    (static, False when every resident request is greedy) skips the
+    per-slot top-k sorts and gumbel draw entirely on the common
+    temperature-0 path.
+    """
+
+    def body(carry, _):
+        tok, caches, counts = carry
+        logits, new_caches = lm.decode_step(
+            params, cfg, tok, caches, compute_dtype=dtype, ctx=ctx,
+        )
+        new_caches = lm.mask_slots(cfg, new_caches, caches, active)
+        if sampled:
+            keys = jax.vmap(
+                lambda r, c: request_token_key(base_key, r, c)
+            )(rids, counts)
+            nxt = sample_slots(keys, logits, temps, topks,
+                               use_top_k=truncated)
+        else:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        nxt = jnp.where(active, nxt, 0)
+        return (nxt, new_caches, counts + active.astype(jnp.int32)), nxt
+
+    (_, caches, _), toks = jax.lax.scan(
+        body, (tokens, caches, counts), None, length=quantum
+    )
+    return toks, caches
+
+
+def _pool_insert_impl(caches, slot, one, *, cfg: ModelConfig):
+    return lm.slot_insert(cfg, caches, slot, one)
+
+
+def _pool_reset_impl(caches, slot, *, cfg: ModelConfig):
+    return lm.slot_reset(cfg, caches, slot)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_pool_ops():
+    """Build the pool-donating jitted workers once, at first use — one
+    shared jit cache per process, backend queried lazily."""
+    donate = _donate_pool_args()
+    decode = jax.jit(
+        _decode_and_sample_impl,
+        static_argnames=(
+            "cfg", "ctx", "dtype", "quantum", "sampled", "truncated",
+        ),
+        donate_argnums=(2,) if donate else (),
+    )
+    insert = jax.jit(
+        _pool_insert_impl, static_argnames=("cfg",),
+        donate_argnums=(0,) if donate else (),
+    )
+    reset = jax.jit(
+        _pool_reset_impl, static_argnames=("cfg",),
+        donate_argnums=(0,) if donate else (),
+    )
+    return decode, insert, reset
+
+
+class ServeEngine(Backend):
+    """Continuous-batching serve engine: ``submit() / step() / drain()``.
+
+    One engine owns one slot pool.  ``submit`` enqueues a request (FIFO);
+    every ``step`` admits queued requests into free slots (one exact-length
+    prefill each, scattered into the pool through the mixer cache-slot
+    contract) and runs a single jitted decode step over all active slots.
+    Greedy outputs are token-identical to per-request sequential
+    :func:`generate` (property-tested for every decode-capable mixer
+    pattern); sampled requests are schedule-independent — a deterministic
+    function of ``(seed, rid, token index)``, never of slot placement or
+    pool composition — but draw a different key stream than ``generate``'s
+    batch-wide ``jax.random.split``.
+
+    ``stream`` callbacks fire per emitted token as ``cb(rid, token, done)``.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, scfg: ServeConfig,
+                 *, seed: int = 0):
+        for m in cfg.pattern:
+            if not get_mixer(m).supports_decode:
+                raise ValueError(
+                    f"mixer '{m}' does not support decode; cannot serve "
+                    f"pattern {cfg.pattern}"
+                )
+        if cfg.frontend or cfg.frontend_len:
+            # submit() has no frontend_embeds path: prompts would silently
+            # embed frontend positions as ordinary tokens
+            raise ValueError(
+                "ServeEngine does not support modality-frontend configs; "
+                "strip the frontend (frontend=None, frontend_len=0) or use "
+                "the static generate(frontend_embeds=...) path"
+            )
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+        self.ctx = scfg.apply_context()
+        self._base_key = jax.random.PRNGKey(seed)
+        S = scfg.n_slots
+        self.scheduler = Scheduler(S)
+        self.pool = None  # built lazily from the first prefill's cache
+        self._last_tok = np.zeros((S,), np.int32)  # last emitted, per slot
+        self._requests: Dict[int, Request] = {}  # queued + resident only
+        self._results: Dict[int, np.ndarray] = {}  # finished
+        self._next_rid = 0
+
+    # ------------------------------------------------------------- public
+    def submit(
+        self,
+        prompt,
+        *,
+        max_new_tokens: int,
+        temperature: Optional[float] = None,
+        top_k: Optional[int] = None,
+        stop_tokens: Sequence[int] = (),
+        stream: Optional[Callable[[int, int, bool], None]] = None,
+    ) -> int:
+        """Enqueue a request; returns its rid.  Generation starts at the
+        next ``step()``."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size < 1:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if prompt.size + max_new_tokens > self.scfg.max_len:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new_tokens "
+                f"({max_new_tokens}) exceeds max_len {self.scfg.max_len}"
+            )
+        sp = SamplingParams(
+            max_new_tokens=int(max_new_tokens),
+            temperature=self.scfg.temperature if temperature is None
+            else float(temperature),
+            top_k=self.scfg.top_k if top_k is None else int(top_k),
+            stop_tokens=tuple(int(t) for t in stop_tokens),
+        )
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=prompt, params=sp, stream=stream)
+        self._requests[rid] = req
+        self.scheduler.submit(req)
+        return rid
+
+    def step(self):
+        """One scheduler tick (admissions + one pooled decode step).
+        Returns the list of :class:`Event` emitted this step."""
+        try:
+            return self.scheduler.step(self)
+        finally:
+            # a long-lived engine must not retain finished Request objects
+            # (prompts, token lists, stream-callback closures) forever.
+            # Prune from scheduler state, in a finally: a raising stream
+            # callback must not leave finished requests pinned.
+            self._prune_finished()
+
+    def _prune_finished(self) -> None:
+        live = {r.rid for r in self.scheduler.queue}
+        live |= {r.rid for r in self.scheduler.slots.values()}
+        for rid in [r for r in self._requests if r not in live]:
+            req = self._requests.pop(rid)
+            self._results[rid] = np.asarray(req.tokens, np.int32)
+
+    def evict(self, rid: int) -> bool:
+        """Preempt a resident request back to the admission queue (its slot
+        is reset; generation resumes via a continuation prefill)."""
+        if self.cfg.moe:
+            # continuation relies on prefill/decode parity; MoE capacity-
+            # based token dropping is batch-shape-dependent, so a
+            # readmission prefill would diverge from the uninterrupted
+            # decode (DESIGN.md §4 I2 excludes MoE for exactly this reason)
+            raise ValueError(
+                "eviction-with-continuation is unsupported for MoE "
+                "configs: capacity-based token dropping breaks "
+                "prefill/decode parity on readmission"
+            )
+        return self.scheduler.evict(rid, self)
+
+    def drain(self, max_steps: int = 100_000) -> Dict[int, np.ndarray]:
+        """Step until queue and pool are empty; returns rid -> tokens."""
+        steps = 0
+        while not self.scheduler.idle:
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError(f"drain exceeded {max_steps} steps")
+        return self.results()
+
+    def results(self) -> Dict[int, np.ndarray]:
+        """Finished outputs plus the partial tokens of in-flight requests."""
+        out = dict(self._results)
+        out.update({
+            rid: np.asarray(req.tokens, np.int32)
+            for rid, req in self._requests.items()
+        })
+        return out
+
+    def pop_result(self, rid: int) -> np.ndarray:
+        """Take (and forget) a finished request's tokens — the retention
+        valve for servers that run one engine indefinitely."""
+        return self._results.pop(rid)
+
+    # ----------------------------------------------- scheduler Backend API
+    def prefill_into_slot(self, slot: int, req: Request) -> int:
+        prompt = req.resume_prompt[None, :]  # (1, L) exact length
+        tok, cache = _prefill_and_sample(
+            self.params, jnp.asarray(prompt),
+            jnp.asarray([req.params.temperature], jnp.float32),
+            jnp.asarray([req.params.top_k], jnp.int32),
+            jnp.asarray(req.rid, jnp.int32),
+            jnp.asarray(req.n_emitted, jnp.int32),
+            self._base_key,
+            cfg=self.cfg, ctx=self.ctx, dtype=self.scfg.cache_dtype,
+            max_len=self.scfg.max_len,
+        )
+        if self.pool is None:
+            self.pool = lm.make_slot_pool(self.cfg, cache, self.scfg.n_slots)
+        _, insert, _ = _jitted_pool_ops()
+        self.pool = insert(
+            self.pool, jnp.asarray(slot, jnp.int32), cache, cfg=self.cfg
+        )
+        tok = int(tok)
+        self._last_tok[slot] = tok
+        return tok
+
+    def decode_active(self, requests: Dict[int, Request]):
+        S = self.scfg.n_slots
+        active = np.zeros((S,), bool)
+        temps = np.zeros((S,), np.float32)
+        topks = np.zeros((S,), np.int32)
+        rids = np.zeros((S,), np.int32)
+        counts = np.zeros((S,), np.int32)
+        for slot, req in requests.items():
+            active[slot] = True
+            temps[slot] = req.params.temperature
+            topks[slot] = req.params.top_k
+            rids[slot] = req.rid
+            counts[slot] = req.n_emitted  # index of the token sampled now
+        decode, _, _ = _jitted_pool_ops()
+        toks, self.pool = decode(
+            self.params, jnp.asarray(self._last_tok), self.pool,
+            jnp.asarray(active), jnp.asarray(temps), jnp.asarray(topks),
+            jnp.asarray(rids), jnp.asarray(counts), self._base_key,
+            cfg=self.cfg, ctx=self.ctx, dtype=self.scfg.cache_dtype,
+            quantum=self.scfg.decode_quantum,
+            sampled=bool((temps > 0.0).any()),
+            truncated=bool((topks > 0).any()),
+        )
+        toks = np.asarray(toks)  # (quantum, S)
+        out: Dict[int, list] = {}
+        for slot in requests:
+            self._last_tok[slot] = int(toks[-1, slot])
+            out[slot] = [int(t) for t in toks[:, slot]]
+        return out
+
+    def reset_slot(self, slot: int) -> None:
+        if self.pool is not None:
+            _, _, reset = _jitted_pool_ops()
+            self.pool = reset(
+                self.pool, jnp.asarray(slot, jnp.int32), cfg=self.cfg
+            )

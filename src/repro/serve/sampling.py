@@ -1,8 +1,39 @@
-"""Token sampling for batched decode."""
+"""Token sampling for batched decode.
+
+Two entry points share one masking core:
+
+  * :func:`sample` — one (temperature, top_k) for the whole batch (the
+    static ``generate`` path and per-request prefill sampling).
+  * :func:`sample_slots` — per-row temperature / top_k / PRNG key, used by
+    the continuous-batching engine where every slot is an independent
+    request with its own sampling params and key stream.
+
+Top-k keeps **exactly** k candidates: candidates are ranked by a stable
+descending argsort, so duplicate kth-value logits are tie-broken toward the
+lower token id instead of all being admitted (the old ``logits < kth``
+threshold kept every tied candidate, silently widening the nucleus).
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def top_k_mask(logits: jax.Array, top_k) -> jax.Array:
+    """Mask all but the top-k logits per row to NEG_INF.
+
+    ``logits``: (..., V); ``top_k``: scalar or (...,) int — 0 keeps all.
+    Exactly k survive per row: ties at the kth value are broken by token id
+    (stable argsort), deterministically.
+    """
+    V = logits.shape[-1]
+    order = jnp.argsort(-logits, axis=-1)  # stable: ties -> lower id first
+    ranks = jnp.argsort(order, axis=-1)  # rank of each token id
+    k = jnp.asarray(top_k, jnp.int32)
+    k = jnp.where(k > 0, k, V)[..., None]
+    return jnp.where(ranks < k, logits, NEG_INF)
 
 
 def sample(
@@ -12,7 +43,27 @@ def sample(
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / temperature
-    if top_k > 0:
-        kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
-        logits = jnp.where(logits < kth, -1e30, logits)
+    if top_k > 0:  # static here — skip the O(V log V) sorts when untruncated
+        logits = top_k_mask(logits, top_k)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_slots(
+    keys,  # (S,) PRNG keys (stacked, one per slot)
+    logits: jax.Array,  # (S, V)
+    temperature: jax.Array,  # (S,) float; <= 0 -> greedy for that slot
+    top_k: jax.Array,  # (S,) int; 0 -> no truncation
+    *,
+    use_top_k: bool = True,  # static: False skips the O(V log V) sorts
+) -> jax.Array:
+    """Per-slot sampling in one fused call: each row draws with its own
+    temperature / top-k / key, so requests with different sampling params
+    coexist in one jitted decode step.  Pass ``use_top_k=False`` (a static
+    Python bool) when every row has top_k == 0 to skip the rank sorts —
+    the per-slot analogue of the scalar ``sample``'s ``if top_k > 0``."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    temperature = jnp.asarray(temperature, jnp.float32)
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    masked = top_k_mask(scaled, top_k) if use_top_k else scaled
+    drawn = jax.vmap(jax.random.categorical)(keys, masked).astype(jnp.int32)
+    return jnp.where(temperature > 0.0, drawn, greedy)

@@ -1,0 +1,61 @@
+"""Cross-backend property test: every registered ConvBackend computes the
+same depthwise causal convolution, within dtype tolerance, on random
+``(B, L, D)`` — including non-power-of-two and prime ``L`` (the FFT-family
+backends pad to 2L internally; blockfft additionally factors 2L for the
+four-step transform, so odd/prime lengths exercise its worst-case path).
+
+The oracle is the O(L²) materialized Toeplitz matmul ("direct").
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import prop
+from repro.core.conv_api import get_conv_backend, registered_conv_backends
+
+# primes, odd composites, powers of two, and off-by-one straddles
+LENGTHS = (1, 2, 3, 5, 7, 13, 16, 31, 33, 37, 48, 61, 64, 97, 127, 128)
+
+
+def _run_all_backends(B, L, D, seed, with_skip):
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.standard_normal((B, L, D)), jnp.float32)
+    h = jnp.asarray(rng.standard_normal((D, L)) / max(L, 1), jnp.float32)
+    skip = (
+        jnp.asarray(rng.standard_normal((D,)), jnp.float32)
+        if with_skip else None
+    )
+    want = np.asarray(get_conv_backend("direct")(u, h, skip))
+    for name, backend in sorted(registered_conv_backends().items()):
+        if backend.max_len and L > backend.max_len:
+            continue
+        got = np.asarray(backend(u, h, skip))
+        np.testing.assert_allclose(
+            got, want, rtol=5e-3, atol=5e-3,
+            err_msg=f"backend '{name}' diverges at (B={B}, L={L}, D={D}, "
+            f"seed={seed}, skip={with_skip})",
+        )
+
+
+@prop.given(
+    B=prop.integers(1, 3),
+    L=prop.sampled_from(LENGTHS),
+    D=prop.sampled_from((1, 2, 4, 5)),
+    seed=prop.integers(0, 1 << 30),
+    with_skip=prop.sampled_from((True, False)),
+)
+def test_conv_backends_agree_random_shapes(B, L, D, seed, with_skip):
+    _run_all_backends(B, L, D, seed, with_skip)
+
+
+test_conv_backends_agree_random_shapes = pytest.mark.slow(
+    test_conv_backends_agree_random_shapes
+)
+
+
+@pytest.mark.parametrize("L", [7, 37, 61, 97])
+def test_conv_backends_agree_prime_lengths(L):
+    """Fast-tier pin on the prime lengths (the historically risky cases for
+    padded-FFT and factored-FFT implementations)."""
+    _run_all_backends(2, L, 4, seed=L, with_skip=True)

@@ -112,6 +112,71 @@ def test_cache_spec_stable_under_decode(mixer):
     assert spec(cache) == spec(cache2), mixer
 
 
+@pytest.mark.parametrize("mixer", BUILTIN_MIXERS)
+def test_cache_slot_ops_conformance(mixer):
+    """The serving slot contract: cache_slot_axes covers every cache key,
+    cache_slice/cache_insert roundtrip one request's state between a pooled
+    cache and a batch-1 cache, and cache_reset zeroes exactly one slot."""
+    cfg = small_cfg(mixer)
+    m = get_mixer(mixer)
+    mc = m.make_config(cfg)
+    B, L = 3, 8
+    params, _ = split_params(m.init(jax.random.PRNGKey(0), mc))
+    xa = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (B, L, cfg.d_model))
+    xb = 0.5 * jax.random.normal(jax.random.PRNGKey(2), (1, L, cfg.d_model))
+    _, pool = m.prefill(params, mc, xa, L, jnp.float32, ApplyContext())
+    _, one = m.prefill(params, mc, xb, L, jnp.float32, ApplyContext())
+    axes = m.cache_slot_axes(mc)
+    assert set(axes) <= set(pool), (set(axes), set(pool))
+    assert set(m.init_cache(mc, B, L, jnp.float32)) <= set(pool)
+
+    # slice(insert(pool, s, one), s) == one, for every per-slot leaf
+    slot = 1
+    pool2 = m.cache_insert(mc, pool, slot, one)
+    back = m.cache_slice(mc, pool2, slot)
+    for k in pool:
+        np.testing.assert_allclose(
+            np.asarray(back[k], np.float32), np.asarray(one[k], np.float32),
+            err_msg=f"{mixer}.{k}",
+        )
+        # the other slots are untouched by the insert
+        ax = axes.get(k, 0)
+        if ax >= 0:
+            np.testing.assert_allclose(
+                np.asarray(jnp.take(pool2[k], 0, axis=ax), np.float32),
+                np.asarray(jnp.take(pool[k], 0, axis=ax), np.float32),
+                err_msg=f"{mixer}.{k} slot 0 disturbed",
+            )
+
+    # reset zeroes exactly the target slot; shared leaves survive
+    pool3 = m.cache_reset(mc, pool2, slot)
+    for k in pool3:
+        ax = axes.get(k, 0)
+        if ax < 0:
+            np.testing.assert_array_equal(
+                np.asarray(pool3[k]), np.asarray(pool2[k]), err_msg=k
+            )
+        else:
+            assert float(jnp.sum(jnp.abs(
+                jnp.take(pool3[k], slot, axis=ax).astype(jnp.float32)
+            ))) == 0.0, f"{mixer}.{k} not reset"
+            np.testing.assert_array_equal(
+                np.asarray(jnp.take(pool3[k], 2, axis=ax)),
+                np.asarray(jnp.take(pool2[k], 2, axis=ax)),
+                err_msg=f"{mixer}.{k} slot 2 disturbed by reset",
+            )
+
+    # an inserted slot decodes exactly like the standalone batch-1 cache
+    x_t = 0.1 * jax.random.normal(jax.random.PRNGKey(3), (B, cfg.d_model))
+    y_pool, _ = m.decode_step(params, mc, x_t, pool2)
+    y_one, _ = m.decode_step(params, mc, x_t[slot : slot + 1], one)
+    np.testing.assert_allclose(
+        np.asarray(y_pool[slot], np.float32),
+        np.asarray(y_one[0], np.float32), rtol=1e-4, atol=1e-4,
+        err_msg=f"{mixer}: pooled decode != standalone decode",
+    )
+
+
 def _tree_bytes(tree) -> int:
     return sum(
         int(np.prod(leaf.shape)) * leaf.dtype.itemsize
