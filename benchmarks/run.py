@@ -7,10 +7,18 @@
   bench_runtime   — Fig 4.3 (operator runtime crossover vs attention)
   bench_kernels   — §4.4 supplement (conv backend micro-bench)
   bench_roofline  — §Roofline terms from the multi-pod dry-run artifacts
+
+``--json PATH`` additionally writes the rows as a machine-readable artifact.
+Convention: perf-trajectory artifacts are committed as ``BENCH_<topic>.json``
+at the repo root (``BENCH_conv.json`` = the conv-backend/gated-fusion rows
+from ``--only kernels``), so successive PRs are held to a measured baseline.
+Each artifact records the jax backend and device — CI writes interpret/CPU
+numbers, which are comparable only to other CI runs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -18,6 +26,10 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="run a single bench module")
+    ap.add_argument(
+        "--json", default=None, metavar="PATH",
+        help="also write rows to PATH as a BENCH_*.json artifact",
+    )
     args = ap.parse_args()
 
     from benchmarks import (
@@ -39,6 +51,7 @@ def main() -> None:
         modules = {args.only: modules[args.only]}
 
     rows = []
+    errors = []
     print("name,us_per_call,derived")
     for name, mod in modules.items():
         try:
@@ -48,7 +61,28 @@ def main() -> None:
                 print(f"{r[0]},{r[1]:.1f},{r[2]}")
                 sys.stdout.flush()
         except Exception:
-            print(f"{name}/ERROR,0.0,{traceback.format_exc(limit=1)!r}")
+            err = traceback.format_exc(limit=1)
+            errors.append({"module": name, "error": err})
+            print(f"{name}/ERROR,0.0,{err!r}")
+
+    if args.json:
+        import jax
+
+        artifact = {
+            "schema": "repro-bench-v1",
+            "backend": jax.default_backend(),
+            "device": str(jax.devices()[0]).split(":")[0],
+            "modules": sorted(modules),
+            "rows": [
+                {"name": n, "us_per_call": round(t, 1), "derived": str(d)}
+                for n, t, d in rows
+            ],
+            "errors": errors,
+        }
+        with open(args.json, "w") as f:
+            json.dump(artifact, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json} ({len(rows)} rows)", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -27,6 +27,22 @@ import jax
 import jax.numpy as jnp
 
 
+def factor_candidates(N: int, limit: int = 6) -> Tuple[Tuple[int, int], ...]:
+    """Valid (R, S) splits of N for the four-step transform, nearest-√N
+    first — the autotune search space for this backend (core.autotune).
+
+    Every divisor pair computes the same DFT; they differ only in how the
+    work lands on the two small dense matmuls (R×R and S×S), so searching
+    over them is semantics-preserving by construction."""
+    divs = [r for r in range(1, math.isqrt(N) + 1) if N % r == 0]
+    pairs = []
+    for r in reversed(divs):  # closest to √N first
+        pairs.append((r, N // r))
+        if (N // r, r) != (r, N // r):
+            pairs.append((N // r, r))
+    return tuple(pairs[:limit])
+
+
 def _factor(N: int) -> Tuple[int, int]:
     """N = R·S with R preferring the MXU-friendly power-of-two near √N.
 
@@ -46,22 +62,29 @@ def _factor(N: int) -> Tuple[int, int]:
 
 
 @functools.lru_cache(maxsize=32)
-def _dft_mats(N: int):
-    R, S = _factor(N)
-    r = jnp.arange(R)
-    s = jnp.arange(S)
-    FR = jnp.exp(-2j * jnp.pi * jnp.outer(r, r) / R).astype(jnp.complex64)
-    FS = jnp.exp(-2j * jnp.pi * jnp.outer(s, s) / S).astype(jnp.complex64)
-    TW = jnp.exp(
-        -2j * jnp.pi * jnp.outer(r, s) / N
-    ).astype(jnp.complex64)  # W_N^{k1·s}
+def _dft_mats(N: int, factors: Optional[Tuple[int, int]] = None):
+    # numpy on purpose: this cache is shared across jit traces, and jnp
+    # constant construction inside a trace would poison it with tracers
+    # from a long-dead trace (UnexpectedTracerError on the next jit).
+    import numpy as np
+
+    R, S = _factor(N) if factors is None else factors
+    if R * S != N:
+        raise ValueError(f"factors {factors} do not multiply to N={N}")
+    r = np.arange(R)
+    s = np.arange(S)
+    FR = np.exp(-2j * np.pi * np.outer(r, r) / R).astype(np.complex64)
+    FS = np.exp(-2j * np.pi * np.outer(s, s) / S).astype(np.complex64)
+    TW = np.exp(
+        -2j * np.pi * np.outer(r, s) / N
+    ).astype(np.complex64)  # W_N^{k1·s}
     return R, S, FR, FS, TW
 
 
-def _four_step_fft(x: jax.Array, N: int) -> jax.Array:
+def _four_step_fft(x: jax.Array, N: int, factors=None) -> jax.Array:
     """x: (B, N, D) real/complex -> spectrum C (B, R, S, D) with
     X[k1 + k2·R] = C[:, k1, k2, :]."""
-    R, S, FR, FS, TW = _dft_mats(N)
+    R, S, FR, FS, TW = _dft_mats(N, factors)
     B, _, D = x.shape
     A = x.reshape(B, R, S, D).astype(jnp.complex64)
     Bm = jnp.einsum("kr,brsd->bksd", FR, A)
@@ -69,9 +92,9 @@ def _four_step_fft(x: jax.Array, N: int) -> jax.Array:
     return jnp.einsum("bksd,sj->bkjd", Bm, FS)
 
 
-def _four_step_ifft(C: jax.Array, N: int) -> jax.Array:
+def _four_step_ifft(C: jax.Array, N: int, factors=None) -> jax.Array:
     """Inverse of _four_step_fft (same layout). Returns (B, N, D) complex."""
-    R, S, FR, FS, TW = _dft_mats(N)
+    R, S, FR, FS, TW = _dft_mats(N, factors)
     Dm = jnp.einsum("bkjd,sj->bksd", C, jnp.conj(FS))
     Dm = Dm * jnp.conj(TW)[None, :, :, None]
     A = jnp.einsum("kr,bksd->brsd", jnp.conj(FR), Dm) / N
@@ -83,17 +106,30 @@ def blockfft_causal_conv(
     u: jax.Array,  # (B, L, D)
     h: jax.Array,  # (D, L)
     skip: Optional[jax.Array] = None,
+    gate: Optional[jax.Array] = None,  # (B, L, D)
+    *,
+    factors: Optional[Tuple[int, int]] = None,  # autotuned (R, S) split
 ) -> jax.Array:
+    from repro.core.fftconv import next_fast_len
+
     B, L, D = u.shape
-    N = 2 * L
-    R, S = _factor(N)
+    # any N >= 2L-1 keeps the first L outputs wrap-free; a 5-smooth N also
+    # keeps the four-step factor split balanced for odd / prime-ish L
+    N = next_fast_len(2 * L - 1)
+    if factors is not None and factors[0] * factors[1] != N:
+        factors = None  # stale plan for a different padded length
     u32 = u.astype(jnp.float32)
     up = jnp.pad(u32, ((0, 0), (0, N - L), (0, 0)))
     hp = jnp.pad(h.astype(jnp.float32).T, ((0, N - L), (0, 0)))[None]  # (1, N, D)
-    U = _four_step_fft(up, N)
-    H = _four_step_fft(hp, N)
+    U = _four_step_fft(up, N, factors)
+    H = _four_step_fft(hp, N, factors)
     Y = U * H
-    y = _four_step_ifft(Y, N).real[:, :L, :]
+    y = _four_step_ifft(Y, N, factors).real[:, :L, :]
     if skip is not None:
         y = y + u32 * skip[None, None, :].astype(jnp.float32)
-    return y.astype(u.dtype)
+    # downcast BEFORE the gate: fused == gate * unfused bit-for-bit
+    # (see fftconv._fused_epilogue)
+    y = y.astype(u.dtype)
+    if gate is not None:
+        y = y * gate.astype(u.dtype)
+    return y

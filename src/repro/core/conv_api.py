@@ -1,11 +1,22 @@
 """ConvBackend registry: the single dispatch point for Hyena's long
-causal convolution (see DESIGN.md §2–3).
+causal convolution (see DESIGN.md §2–3, §7).
 
-Every backend implements the same contract — ``fn(u, h, skip) -> y`` with
-``u: (B, L, D)``, ``h: (D, L)``, ``skip: (D,) | None`` — plus capability
+Every backend implements the same contract —
+``fn(u, h, skip, gate=None) -> y`` with ``u: (B, L, D)``, ``h: (D, L)``,
+``skip: (D,) | None``, ``gate: (B, L, D) | None`` — plus capability
 metadata used for *early* validation (at config/context construction, not
 mid-forward) and for tooling (benchmarks iterate the registry instead of
 hard-coding imports).
+
+``gate`` is the Hyena recurrence's data-controlled multiplier
+``xⁿ ⊙ conv(v)``: backends with ``supports_gate`` fuse it into the conv
+itself (at the Pallas kernel's finalize, or in the single post-iFFT
+elementwise pass), eliminating one full-tensor HBM write+read per order.
+Fusion is bit-identical to the two-pass schedule ``gate * fn(u, h, skip)``
+— a pure memory-traffic optimization that can never change model outputs
+(DESIGN.md §7).  Backends without the flag still honor the argument — the
+registry applies the gate as a separate multiply — so callers can use the
+gated entry point unconditionally.
 
 Adding a backend is one module + one ``register_conv_backend`` call; no
 dispatch site anywhere else changes.  Backend resolution — including the
@@ -26,9 +37,10 @@ DEFAULT_BACKEND = "fft"
 class ConvBackend:
     """A registered long-conv implementation with capability flags.
 
-    ``fn(u, h, skip)``: depthwise causal conv of ``u (B, L, D)`` with
-    per-channel length-L filters ``h (D, L)`` and optional residual gain
-    ``skip (D,)``.
+    ``fn(u, h, skip, gate=None)``: depthwise causal conv of ``u (B, L, D)``
+    with per-channel length-L filters ``h (D, L)``, optional residual gain
+    ``skip (D,)``, and (when ``supports_gate``) a fused elementwise output
+    gate ``gate (B, L, D)``.
     """
 
     name: str
@@ -39,6 +51,7 @@ class ConvBackend:
     mesh_aware: bool = False  # runs collective-free under a sharded mesh
     oracle: bool = False  # O(L²) reference — tests/tiny L only
     max_len: int = 0  # 0 = unconstrained; else largest supported L
+    supports_gate: bool = False  # fn fuses the elementwise output gate
 
     def validate_len(self, L: int) -> None:
         if self.max_len and L > self.max_len:
@@ -47,8 +60,14 @@ class ConvBackend:
                 f"got {L}"
             )
 
-    def __call__(self, u, h, skip=None):
-        return self.fn(u, h, skip)
+    def __call__(self, u, h, skip=None, gate=None):
+        if gate is None:
+            return self.fn(u, h, skip)
+        if self.supports_gate:
+            return self.fn(u, h, skip, gate)
+        # unfused fallback: same semantics, one extra full-tensor pass —
+        # external registrations work before they learn the gate protocol
+        return (gate * self.fn(u, h, skip).astype(gate.dtype)).astype(u.dtype)
 
 
 _BACKENDS: Dict[str, ConvBackend] = {}
@@ -103,58 +122,84 @@ def resolve_conv_backend(
 # The wrappers import lazily so that e.g. the Pallas toolchain is only
 # touched when the 'toeplitz' backend is actually selected.
 
-def _fft(u, h, skip=None):
+def _fft(u, h, skip=None, gate=None):
     from repro.core.fftconv import fft_causal_conv_sharded
 
-    return fft_causal_conv_sharded(u, h, skip)
+    return fft_causal_conv_sharded(u, h, skip, gate)
 
 
-def _fft_local(u, h, skip=None):
+def _fft_local(u, h, skip=None, gate=None):
     from repro.core.fftconv import fft_causal_conv
 
-    return fft_causal_conv(u, h, skip)
+    return fft_causal_conv(u, h, skip, gate)
 
 
-def _direct(u, h, skip=None):
+def _direct(u, h, skip=None, gate=None):
     from repro.core.fftconv import direct_causal_conv
 
-    return direct_causal_conv(u, h, skip)
+    return direct_causal_conv(u, h, skip, gate)
 
 
-def _blockfft(u, h, skip=None):
-    from repro.core.blockfft import blockfft_causal_conv
+def _blockfft(u, h, skip=None, gate=None):
+    from repro.core import autotune
+    from repro.core.blockfft import blockfft_causal_conv, factor_candidates
+    from repro.core.fftconv import next_fast_len
 
-    return blockfft_causal_conv(u, h, skip)
+    factors = None
+    if autotune.mode() != "off":
+        N = next_fast_len(2 * u.shape[1] - 1)
+
+        def run(factors):
+            import jax.numpy as jnp
+
+            uu = jnp.ones(u.shape, u.dtype)
+            hh = jnp.ones((u.shape[2], u.shape[1]), jnp.float32)
+            return blockfft_causal_conv(uu, hh, factors=tuple(factors))
+
+        plan = autotune.plan_for(
+            "blockfft", u.shape, u.dtype,
+            candidates=[{"factors": list(p)} for p in factor_candidates(N)],
+            run=run,
+        )
+        if plan:
+            factors = tuple(plan["factors"])
+    return blockfft_causal_conv(u, h, skip, gate, factors=factors)
 
 
-def _toeplitz(u, h, skip=None):
+def _toeplitz(u, h, skip=None, gate=None):
     from repro.kernels import ops as kops
 
-    return kops.toeplitz_conv(u, h, skip)
+    return kops.toeplitz_conv(u, h, skip, gate)
 
 
 register_conv_backend(ConvBackend(
     name="fft", tag="shard_map_fft", fn=_fft, mesh_aware=True,
-    description="O(L log L) real FFT on 2L points; shard_map-forced "
-    "per-chip execution under a mesh, plain XLA FFT otherwise.",
+    supports_gate=True,
+    description="O(L log L) real FFT on fast-composite >= 2L-1 points; "
+    "shard_map-forced per-chip execution under a mesh, plain XLA FFT "
+    "otherwise; gate+skip fused into the post-iFFT elementwise pass.",
 ))
 register_conv_backend(ConvBackend(
-    name="fft_local", tag="xla_fft", fn=_fft_local,
+    name="fft_local", tag="xla_fft", fn=_fft_local, supports_gate=True,
     description="single-device XLA FFT path (no shard_map), used as the "
     "oracle for the sharded variant.",
 ))
 register_conv_backend(ConvBackend(
-    name="direct", tag="toeplitz_oracle", fn=_direct, oracle=True, max_len=4096,
+    name="direct", tag="toeplitz_oracle", fn=_direct, oracle=True,
+    max_len=4096, supports_gate=True,
     description="O(L²) materialized lower-triangular Toeplitz matmul — "
     "the correctness oracle for tiny L.",
 ))
 register_conv_backend(ConvBackend(
-    name="blockfft", tag="matmul_dft", fn=_blockfft,
+    name="blockfft", tag="matmul_dft", fn=_blockfft, supports_gate=True,
     description="four-step (Bailey) FFT with the small DFTs as dense "
-    "matmuls — every FLOP on the MXU (H3-style block FFT).",
+    "matmuls — every FLOP on the MXU (H3-style block FFT); factor split "
+    "autotunable (core.autotune).",
 ))
 register_conv_backend(ConvBackend(
     name="toeplitz", tag="pallas_mxu", fn=_toeplitz, requires_pallas=True,
+    supports_gate=True,
     description="chunked block-Toeplitz Pallas MXU kernel (DESIGN.md §2); "
-    "interpret-mode off-TPU, jnp oracle on CPU.",
+    "gate fused at kernel finalize in VMEM; interpret-mode off-TPU, jnp "
+    "oracle on CPU.",
 ))

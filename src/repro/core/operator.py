@@ -8,7 +8,9 @@ Forward pass (Algorithm 3), width D, order N, channel-last activations:
   2. Filters (Alg. 2): ``h¹..h^N`` from the implicit FFN parameterization
      (:mod:`repro.core.filters`).
   3. Recurrence: ``v ← x^n ⊙ FFTConv(h^n, v)`` for n = 1..N; output
-     projection D → D.
+     projection D → D.  The gate ``x^n ⊙`` is *fused into the conv backend*
+     (conv_api's gated contract, DESIGN.md §7): the operator never runs a
+     standalone full-tensor gate multiply.
 
 Equivalently ``y = H(u)v`` with ``H(u) = D_x^N S_h^N ⋯ D_x^1 S_h^1`` — tested
 against :mod:`repro.core.matrices`.  H3 == Hyena₂, GSS == Hyena₁ (Rmk 3.2).
@@ -22,6 +24,7 @@ FFTConv; see DESIGN.md §2).
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -30,7 +33,7 @@ import jax.numpy as jnp
 from repro.common.param import Ax
 from repro.core import filters as F
 from repro.core.conv_api import get_conv_backend
-from repro.core.fftconv import conv_cache_step, short_causal_conv
+from repro.core.fftconv import short_causal_conv
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,7 +113,7 @@ def hyena_operator(
     h = F.evaluate_filters(params["filters"], cfg.filter, L)  # (N, D, L)
     skip = F.filter_skip(params["filters"], cfg.filter)  # (N, D)
     for n in range(cfg.order):
-        v = xs[n] * backend(v, h[n], skip[n]).astype(u.dtype)
+        v = backend(v, h[n], skip[n], gate=xs[n]).astype(u.dtype)
     y = v @ params["out_proj"]["w"].astype(u.dtype)
     if "b" in params["out_proj"]:
         y = y + params["out_proj"]["b"].astype(u.dtype)
@@ -139,16 +142,60 @@ def init_decode_cache(cfg: HyenaConfig, batch: int, max_len: int, dtype=jnp.bflo
     }
 
 
+# One-time host-side memo for callers that forgot precompute_decode_filters:
+# the taps of a given (filter params, cfg.filter, L_cache) are evaluated on
+# the FIRST fallback decode step and reused for every later token, instead of
+# re-running the full filter FFN over the whole cache grid per token (a
+# serving-latency cliff).  Keyed by param-leaf ids with a weakref eviction
+# hook (jax arrays are weakref-able but not hashable) so updated / freed
+# params drop their taps; the cache treedef is untouched (the mixer contract
+# requires decode_step to preserve it for lax.scan).
+_FALLBACK_TAPS: Dict[tuple, tuple] = {}
+
+
+def _fallback_decode_taps(params, cfg: HyenaConfig, Lc: int):
+    leaves = jax.tree_util.tree_leaves(params["filters"])
+    if not leaves or any(isinstance(l, jax.core.Tracer) for l in leaves):
+        # traced decode paths must precompute (prefill does); evaluating
+        # here would bake the FFN into every unrolled/scanned step
+        return (
+            F.evaluate_filters(params["filters"], cfg.filter, Lc),
+            F.filter_skip(params["filters"], cfg.filter),
+        )
+    key = (cfg.filter, Lc, tuple(id(l) for l in leaves))
+    hit = _FALLBACK_TAPS.get(key)
+    if hit is not None and all(
+        r() is l for r, l in zip(hit[0], leaves)
+    ):  # id-reuse guard: EVERY leaf must still be the object we memoized
+        return hit[1]
+    taps = (
+        F.evaluate_filters(params["filters"], cfg.filter, Lc),
+        F.filter_skip(params["filters"], cfg.filter),
+    )
+    evict = lambda _, k=key: _FALLBACK_TAPS.pop(k, None)
+    _FALLBACK_TAPS[key] = (
+        tuple(weakref.ref(l, evict) for l in leaves),
+        taps,
+    )
+    return taps
+
+
 def hyena_decode_step(
     params, cfg: HyenaConfig, u_t: jax.Array, cache: Dict[str, Any]
 ) -> Tuple[jax.Array, Dict[str, Any]]:
     """One token: u_t (B, D) -> y_t (B, D), updated cache.
 
-    Matches ``hyena_operator`` teacher-forced outputs (tested): the long conv
-    is evaluated as an explicit dot against the cached operand history, the
-    filter taps being re-evaluated (cheap: one FFN pass over L grid points is
-    *not* needed per step — taps are evaluated once per sequence by the
-    caller via ``precompute_decode_filters`` and passed in the cache).
+    Matches ``hyena_operator`` teacher-forced outputs (tested).  The long
+    convs of all N orders are evaluated against the cached operand
+    histories in ONE stacked ``(N, B, Lc, D) × (N, D, Lc)`` dot_general —
+    the history term of order n does not depend on the current token's
+    recurrence value, so only the cheap rank-1 correction
+    ``(h^n_0 + skip^n) · v`` stays inside the sequential order loop.
+
+    Filter taps should be precomputed (``precompute_decode_filters`` /
+    mixer prefill).  A cache without taps falls back to a ONE-TIME
+    host-side evaluation (memoized per filter params × cache length) —
+    never the old per-token filter-FFN re-evaluation cliff.
     """
     B, Dm = u_t.shape
     N = cfg.order
@@ -156,8 +203,7 @@ def hyena_decode_step(
     h = cache.get("h")
     skip = cache.get("skip")
     if h is None:
-        h = F.evaluate_filters(params["filters"], cfg.filter, Lc)
-        skip = F.filter_skip(params["filters"], cfg.filter)
+        h, skip = _fallback_decode_taps(params, cfg, Lc)
     # --- projection + short conv (explicit taps over a tiny rolling window)
     z = u_t @ params["in_proj"]["w"].astype(u_t.dtype)
     if "b" in params["in_proj"]:
@@ -173,11 +219,31 @@ def hyena_decode_step(
     zc = zc.astype(u_t.dtype)
     parts = jnp.split(zc, N + 1, axis=-1)
     v, xs = parts[0], parts[1:]
-    # --- recurrence with per-order conv caches
+    # --- recurrence: one stacked history dot for all orders.  The rolling
+    # cache is newest-first and the incoming token shifts it by one, so
+    #   y^n = h^n_0·v^n + Σ_{l=1..Lc-1} h^n_l·cache^n_{l-1} + skip^n·v^n
+    # — the Σ term (the expensive O(N·B·Lc·D) part) only reads the cache,
+    # never the current v^n, and collapses into a single dot_general.
+    cache32 = cache["long"][:, :, : Lc - 1].astype(jnp.float32)  # (N,B,Lc-1,D)
+    taps32 = h[:, :, 1:Lc].astype(jnp.float32)  # (N, D, Lc-1)
+    hist = jax.lax.dot_general(
+        cache32.transpose(0, 1, 3, 2),  # (N, B, D, Lc-1)
+        taps32,  # (N, D, Lc-1)
+        ((((3,), (2,))), (((0, 2), (0, 1)))),  # contract lag; batch (N, D)
+        preferred_element_type=jnp.float32,
+    )  # (N, D, B)
+    hist = hist.transpose(0, 2, 1)  # (N, B, D)
+    h0 = (h[:, :, 0] + skip).astype(jnp.float32)  # (N, D) fused rank-1 taps
     new_long = []
+    ldtype = cache["long"].dtype
     for n in range(N):
-        conv_y, new_cache_n = conv_cache_step(cache["long"][n], v, h[n], skip[n])
-        new_long.append(new_cache_n)
+        new_long.append(
+            jnp.concatenate(
+                [v[:, None, :].astype(ldtype), cache["long"][n][:, : Lc - 1]],
+                axis=1,
+            )
+        )
+        conv_y = hist[n] + v.astype(jnp.float32) * h0[n][None, :]
         v = xs[n] * conv_y.astype(u_t.dtype)
     y = v @ params["out_proj"]["w"].astype(u_t.dtype)
     if "b" in params["out_proj"]:

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.platform import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -94,8 +96,9 @@ def flash_attention(
     scale: float | None = None,
     blk_q: int = 128,
     blk_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,  # None => interpret off-TPU only
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     B, H, Lq, Dh = q.shape
     Hkv, Lk = k.shape[1], k.shape[2]
     G = H // Hkv

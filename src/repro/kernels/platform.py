@@ -1,0 +1,21 @@
+"""Shared platform detection for the Pallas kernel entry points.
+
+Every raw kernel wrapper defaults ``interpret=None`` → "interpret unless we
+are actually on a TPU".  The old hard-coded ``interpret=True`` default meant
+direct callers (anyone bypassing :mod:`repro.kernels.ops`) silently ran the
+interpreter on real hardware — a correctness-preserving but catastrophic
+slowdown.  ``interpret`` stays a jit-static argument, so ``None`` is resolved
+here exactly once per trace.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` → auto-detect: native lowering on TPU, interpreter elsewhere."""
+    return (not on_tpu()) if interpret is None else interpret

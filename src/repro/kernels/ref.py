@@ -33,6 +33,7 @@ def toeplitz_conv(
     u: jax.Array,  # (B, L, D)
     h: jax.Array,  # (D, L) causal filter taps
     skip: Optional[jax.Array] = None,  # (D,)
+    gate: Optional[jax.Array] = None,  # (B, L, D) elementwise output gate
     n_chunk_diags: Optional[int] = None,  # banded support: K block diagonals
     chunk: int = 128,
 ) -> jax.Array:
@@ -52,7 +53,12 @@ def toeplitz_conv(
     y = jnp.einsum("dij,bjd->bid", S, u.astype(jnp.float32))
     if skip is not None:
         y = y + u.astype(jnp.float32) * skip.astype(jnp.float32)[None, None, :]
-    return y.astype(u.dtype)
+    # downcast before the gate: the gated conv must equal the two-pass
+    # schedule gate * conv(u) bit-for-bit (core.fftconv._fused_epilogue)
+    y = y.astype(u.dtype)
+    if gate is not None:
+        y = y * gate.astype(u.dtype)
+    return y
 
 
 def flash_attention(

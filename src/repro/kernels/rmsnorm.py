@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.platform import resolve_interpret
+
 
 def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
     x = x_ref[...].astype(jnp.float32)  # (rows, D)
@@ -28,8 +30,9 @@ def rmsnorm(
     *,
     eps: float = 1e-6,
     block_rows: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,  # None => interpret off-TPU only
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     orig_shape = x.shape
     D = orig_shape[-1]
     rows = 1

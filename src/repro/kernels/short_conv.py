@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.platform import resolve_interpret
+
 
 def _short_conv_kernel(u_ref, uprev_ref, w_ref, g_ref, o_ref, *, K: int, gated: bool):
     i = pl.program_id(1)  # L-block index
@@ -46,8 +48,9 @@ def short_conv_gate(
     *,
     block_l: int = 512,
     block_d: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,  # None => interpret off-TPU only
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     B, L, D = u.shape
     K = w.shape[1]
     block_l = min(block_l, L)

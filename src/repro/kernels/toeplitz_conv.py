@@ -16,6 +16,14 @@ Causality inside the diagonal block is obtained *structurally*: the filter is
 front-padded with C zeros, so negative lags index into the zero pad — no
 masks in the inner loop.
 
+The Hyena recurrence's data-controlled gate ``xⁿ ⊙ conv(v)`` fuses into the
+kernel: the gate chunk rides in through one extra BlockSpec and multiplies
+the downcast accumulator at finalize, in VMEM, so the gated conv output
+hits HBM exactly once — the unfused path wrote the conv output and re-read
+it for a separate full-tensor gate multiply.  The multiply happens in the
+*output* dtype, bit-identical to the two-pass schedule it replaces
+(core.fftconv._fused_epilogue documents the policy).
+
 Grid: (d_block, i_chunk, j_rel) with j_rel (the chunk diagonal) innermost;
 fp32 VMEM scratch accumulator, finalized on the last diagonal.
 """
@@ -28,8 +36,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.platform import resolve_interpret
 
-def _toeplitz_kernel(u_ref, ha_ref, hb_ref, ui_ref, skip_ref, o_ref, acc_ref, *, C: int, K: int):
+
+def _toeplitz_kernel(
+    u_ref, ha_ref, hb_ref, ui_ref, skip_ref, g_ref, o_ref, acc_ref,
+    *, C: int, K: int, gated: bool,
+):
     r = pl.program_id(2)  # chunk diagonal (j_rel); j = i - r
     i = pl.program_id(1)
 
@@ -57,7 +70,14 @@ def _toeplitz_kernel(u_ref, ha_ref, hb_ref, ui_ref, skip_ref, o_ref, acc_ref, *,
 
     @pl.when(r == K - 1)
     def _finalize():
-        o_ref[...] = acc_ref[...].transpose(2, 1, 0).astype(o_ref.dtype)
+        y = acc_ref[...].transpose(2, 1, 0).astype(o_ref.dtype)
+        if gated:
+            # gate applied to the *downcast* accumulator, in VMEM: saves
+            # the HBM round-trip of the two-pass schedule while staying
+            # bit-identical to it (gate * conv in the output dtype —
+            # fftconv._fused_epilogue documents why)
+            y = y * g_ref[...].astype(o_ref.dtype)
+        o_ref[...] = y
 
 
 @functools.partial(
@@ -68,12 +88,14 @@ def toeplitz_conv(
     u: jax.Array,  # (B, L, D)
     h: jax.Array,  # (D, L)
     skip: jax.Array | None = None,  # (D,)
+    gate: jax.Array | None = None,  # (B, L, D) elementwise output gate
     *,
     chunk: int = 128,
     block_d: int = 128,
     n_chunk_diags: int | None = None,
-    interpret: bool = True,
+    interpret: bool | None = None,  # None => interpret off-TPU only
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     B, L, D = u.shape
     C = min(chunk, L)
     pad_l = (-L) % C
@@ -82,6 +104,8 @@ def toeplitz_conv(
     if pad_l or pad_d:
         u = jnp.pad(u, ((0, 0), (0, pad_l), (0, pad_d)))
         h = jnp.pad(h, ((0, pad_d), (0, pad_l)))
+        if gate is not None:
+            gate = jnp.pad(gate, ((0, 0), (0, pad_l), (0, pad_d)))
     if skip is None:
         skip = jnp.zeros((h.shape[0],), jnp.float32)
     elif pad_d:
@@ -92,9 +116,11 @@ def toeplitz_conv(
     # front-pad C zeros => negative lags hit zeros (structural causality);
     # the last diagonal's high block needs one extra C of zeros at the end.
     hpad = jnp.pad(h, ((0, 0), (C, C)))  # (Dp, Lp + 2C)
+    gated = gate is not None
+    g_in = gate if gated else jnp.zeros((B, 1, Dp), u.dtype)
     grid = (Dp // block_d, n_chunks, K)
     out = pl.pallas_call(
-        functools.partial(_toeplitz_kernel, C=C, K=K),
+        functools.partial(_toeplitz_kernel, C=C, K=K, gated=gated),
         grid=grid,
         in_specs=[
             # u chunk j = i - r (clamped; masked when r > i)
@@ -108,12 +134,18 @@ def toeplitz_conv(
             # u chunk i (skip term, read at r == 0)
             pl.BlockSpec((B, C, block_d), lambda d, i, r: (0, i, d)),
             pl.BlockSpec((1, block_d), lambda d, i, r: (0, d)),
+            # gate chunk i (read at finalize; dummy row when ungated)
+            pl.BlockSpec(
+                (B, C if gated else 1, block_d),
+                (lambda d, i, r: (0, i, d)) if gated
+                else (lambda d, i, r: (0, 0, d)),
+            ),
         ],
         out_specs=pl.BlockSpec((B, C, block_d), lambda d, i, r: (0, i, d)),
         out_shape=jax.ShapeDtypeStruct(u.shape, u.dtype),
         scratch_shapes=[pltpu.VMEM((block_d, C, B), jnp.float32)],
         interpret=interpret,
-    )(u, hpad, hpad, u, skip.reshape(1, -1))
+    )(u, hpad, hpad, u, skip.reshape(1, -1), g_in)
     if pad_l or pad_d:
         out = out[:, :L, :D]
     return out

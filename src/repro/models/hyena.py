@@ -65,8 +65,9 @@ def apply_hyena_mixer(
     backend.validate_len(L)
     for n in range(N):
         hn = shard(h[n], "model", None)  # depthwise: channel-sharded filter
-        conv = backend(v, hn, skip[n])
-        v = xs[n] * conv.astype(x.dtype)
+        # gate fused into the conv backend (xs[n] shares v's sharding, so
+        # the fused multiply stays collective-free)
+        v = backend(v, hn, skip[n], gate=xs[n]).astype(x.dtype)
         v = shard(v, "data", None, "model")
     y = v @ params["out_proj"]["w"].astype(x.dtype)
     if "b" in params["out_proj"]:
@@ -88,7 +89,8 @@ def hyena_prefill(
 ) -> Tuple[jax.Array, dict]:
     """Full-sequence forward capturing the decode caches: the short-conv
     input history and, per order, the conv *operand* history (newest-first),
-    which is exactly what ``conv_cache_step`` dots against at decode time.
+    which is exactly what ``hyena_decode_step``'s stacked history
+    dot_general contracts against at decode time.
 
     The prompt's long convs run on the ``conv_backend`` registration
     (default ``fft``); decode steps themselves are cached dots and have no
@@ -120,8 +122,7 @@ def hyena_prefill(
     longs = []
     for n in range(N):
         longs.append(hist(v))
-        conv = backend(v, h_dec[n][:, :L], skip[n])
-        v = xs[n] * conv.astype(x.dtype)
+        v = backend(v, h_dec[n][:, :L], skip[n], gate=xs[n]).astype(x.dtype)
     y = v @ params["out_proj"]["w"].astype(x.dtype)
     if "b" in params["out_proj"]:
         y = y + params["out_proj"]["b"].astype(x.dtype)

@@ -16,6 +16,12 @@ Two tiers (DESIGN.md §4):
     horizons, and streaming callbacks; slots are scattered/gathered through
     the TokenMixer cache-slot contract (``cache_slot_axes`` et al.).
 
+Prefill runs the gated long-conv entry point (DESIGN.md §7: the Hyena
+gate is fused inside the conv backend, no standalone full-tensor multiply)
+and each Hyena decode step evaluates all orders' cache histories in one
+stacked dot_general; conv tile plans come from ``repro.core.autotune``
+(``$REPRO_AUTOTUNE`` — use ``load`` in serving, never ``search``).
+
 Hyena's O(L) conv cache and the SSD/RG-LRU O(1) recurrent state make the
 per-slot swap far cheaper than attention KV paging: inserting a slot moves
 one operand history (or a single state vector), never a paged KV table.

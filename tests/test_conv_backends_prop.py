@@ -1,10 +1,17 @@
-"""Cross-backend property test: every registered ConvBackend computes the
+"""Cross-backend property tests: every registered ConvBackend computes the
 same depthwise causal convolution, within dtype tolerance, on random
 ``(B, L, D)`` — including non-power-of-two and prime ``L`` (the FFT-family
-backends pad to 2L internally; blockfft additionally factors 2L for the
-four-step transform, so odd/prime lengths exercise its worst-case path).
+backends pad to a fast composite >= 2L-1 internally; blockfft additionally
+factors that length for the four-step transform, so odd/prime lengths
+exercise its worst-case path).
 
 The oracle is the O(L²) materialized Toeplitz matmul ("direct").
+
+Gated parity (DESIGN.md §7): for every backend, the fused gated entry point
+``backend(u, h, skip, gate)`` must equal the two-pass schedule
+``gate * backend(u, h, skip)`` — including the padded/tail-block edges of
+the Pallas kernels, which see the gate through an extra BlockSpec and must
+not gate the padding rows into the live output.
 """
 import jax
 import jax.numpy as jnp
@@ -18,7 +25,7 @@ from repro.core.conv_api import get_conv_backend, registered_conv_backends
 LENGTHS = (1, 2, 3, 5, 7, 13, 16, 31, 33, 37, 48, 61, 64, 97, 127, 128)
 
 
-def _run_all_backends(B, L, D, seed, with_skip):
+def _run_all_backends(B, L, D, seed, with_skip, with_gate=False):
     rng = np.random.default_rng(seed)
     u = jnp.asarray(rng.standard_normal((B, L, D)), jnp.float32)
     h = jnp.asarray(rng.standard_normal((D, L)) / max(L, 1), jnp.float32)
@@ -26,16 +33,29 @@ def _run_all_backends(B, L, D, seed, with_skip):
         jnp.asarray(rng.standard_normal((D,)), jnp.float32)
         if with_skip else None
     )
-    want = np.asarray(get_conv_backend("direct")(u, h, skip))
+    gate = (
+        jnp.asarray(rng.standard_normal((B, L, D)), jnp.float32)
+        if with_gate else None
+    )
+    want = np.asarray(get_conv_backend("direct")(u, h, skip, gate))
     for name, backend in sorted(registered_conv_backends().items()):
         if backend.max_len and L > backend.max_len:
             continue
-        got = np.asarray(backend(u, h, skip))
+        got = np.asarray(backend(u, h, skip, gate))
         np.testing.assert_allclose(
             got, want, rtol=5e-3, atol=5e-3,
             err_msg=f"backend '{name}' diverges at (B={B}, L={L}, D={D}, "
-            f"seed={seed}, skip={with_skip})",
+            f"seed={seed}, skip={with_skip}, gate={with_gate})",
         )
+        if with_gate:
+            # fused == gate * unfused, per backend (not just vs the oracle)
+            two_pass = np.asarray(gate * backend(u, h, skip))
+            np.testing.assert_allclose(
+                got, two_pass, rtol=5e-3, atol=5e-3,
+                err_msg=f"backend '{name}' gated fusion diverges from its "
+                f"own two-pass schedule at (B={B}, L={L}, D={D}, "
+                f"seed={seed}, skip={with_skip})",
+            )
 
 
 @prop.given(
@@ -54,8 +74,56 @@ test_conv_backends_agree_random_shapes = pytest.mark.slow(
 )
 
 
+@prop.given(
+    B=prop.integers(1, 3),
+    L=prop.sampled_from(LENGTHS),
+    D=prop.sampled_from((1, 2, 4, 5)),
+    seed=prop.integers(0, 1 << 30),
+    with_skip=prop.sampled_from((True, False)),
+)
+def test_conv_backends_gated_parity(B, L, D, seed, with_skip):
+    _run_all_backends(B, L, D, seed, with_skip, with_gate=True)
+
+
+test_conv_backends_gated_parity = pytest.mark.slow(
+    test_conv_backends_gated_parity
+)
+
+
 @pytest.mark.parametrize("L", [7, 37, 61, 97])
 def test_conv_backends_agree_prime_lengths(L):
     """Fast-tier pin on the prime lengths (the historically risky cases for
     padded-FFT and factored-FFT implementations)."""
     _run_all_backends(2, L, 4, seed=L, with_skip=True)
+
+
+@pytest.mark.parametrize("L", [7, 33, 61, 128])
+def test_conv_backends_gated_parity_fast(L):
+    """Fast-tier pin of the gated-parity property (odd, straddle, prime,
+    and exact-block lengths)."""
+    _run_all_backends(2, L, 4, seed=1000 + L, with_skip=True, with_gate=True)
+
+
+@pytest.mark.parametrize(
+    "B,L,D,C,bd",
+    [(2, 100, 33, 32, 32), (1, 96, 8, 32, 8), (2, 65, 5, 16, 4)],
+)
+def test_toeplitz_pallas_gated_tail_blocks(B, L, D, C, bd):
+    """The gated Pallas kernel body (interpret mode) on shapes whose L / D
+    pad up to the tile grid: the gate BlockSpec must track the output chunk
+    through the padded tail blocks."""
+    from repro.kernels import ref
+    from repro.kernels.toeplitz_conv import toeplitz_conv
+
+    rng = np.random.default_rng(L * 31 + D)
+    u = jnp.asarray(rng.standard_normal((B, L, D)), jnp.float32)
+    h = jnp.asarray(rng.standard_normal((D, L)) / L, jnp.float32)
+    skip = jnp.asarray(rng.standard_normal((D,)), jnp.float32)
+    gate = jnp.asarray(rng.standard_normal((B, L, D)), jnp.float32)
+    got = toeplitz_conv(
+        u, h, skip, gate, chunk=C, block_d=bd, interpret=True
+    )
+    want = ref.toeplitz_conv(u, h, skip, gate)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4
+    )

@@ -8,6 +8,7 @@ from repro.common.param import split_params
 from repro.core import (
     FilterConfig,
     HyenaConfig,
+    conv_cache_step,
     direct_causal_conv,
     evaluate_filters,
     fft_causal_conv,
@@ -142,6 +143,23 @@ def test_filters_shape_and_grad():
 
 # --------------------------------------------------------------- decode
 
+def test_conv_cache_step_reference_matches_direct():
+    """conv_cache_step is the single-order reference semantics the stacked
+    decode dot in hyena_decode_step must reproduce — pin it against the
+    teacher-forced conv so the exported reference cannot rot."""
+    B, L, D = 2, 10, 4
+    u = jax.random.normal(jax.random.PRNGKey(0), (B, L, D))
+    h = jax.random.normal(jax.random.PRNGKey(1), (D, L)) / L
+    skip = jax.random.normal(jax.random.PRNGKey(2), (D,))
+    want = direct_causal_conv(u, h, skip)
+    cache = jnp.zeros((B, L, D))
+    for t in range(L):
+        y_t, cache = conv_cache_step(cache, u[:, t], h, skip)
+        np.testing.assert_allclose(
+            y_t, want[:, t], rtol=1e-5, atol=1e-5, err_msg=f"step {t}"
+        )
+
+
 def test_decode_matches_prefill():
     """Token-by-token decode reproduces the teacher-forced forward pass."""
     D, L, B = 8, 12, 2
@@ -157,3 +175,34 @@ def test_decode_matches_prefill():
         ys.append(y_t)
     y_dec = jnp.stack(ys, axis=1)
     np.testing.assert_allclose(y_dec, y_ref, rtol=5e-3, atol=5e-3)
+
+
+def test_decode_without_precompute_evaluates_filters_once(monkeypatch):
+    """The forgot-precompute fallback is one-time-cached: the filter FFN
+    must NOT be re-evaluated on every decode token (the serving-latency
+    cliff the taps memo exists to prevent)."""
+    from repro.core import filters as F
+    from repro.core import operator as op
+
+    D, L, B = 8, 10, 2
+    cfg, params = make_op(jax.random.PRNGKey(0), D=D, order=2)
+    u = jax.random.normal(jax.random.PRNGKey(1), (B, L, D))
+    y_ref = hyena_operator(params, cfg, u)
+
+    calls = {"n": 0}
+    real = F.evaluate_filters
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(op.F, "evaluate_filters", counting)
+    cache = init_decode_cache(cfg, B, max_len=L, dtype=jnp.float32)  # no taps
+    ys = []
+    for t in range(L):
+        y_t, cache = hyena_decode_step(params, cfg, u[:, t], cache)
+        ys.append(y_t)
+    assert calls["n"] == 1, f"filter FFN evaluated {calls['n']}x for {L} tokens"
+    np.testing.assert_allclose(
+        jnp.stack(ys, axis=1), y_ref, rtol=5e-3, atol=5e-3
+    )

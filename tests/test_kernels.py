@@ -64,12 +64,14 @@ def test_short_conv_causal_blocks():
     "B,L,D,C", [(2, 64, 8, 16), (1, 128, 16, 32), (2, 96, 8, 32)]
 )
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_toeplitz_conv_full(B, L, D, C, dtype):
+@pytest.mark.parametrize("gated", [False, True])
+def test_toeplitz_conv_full(B, L, D, C, dtype, gated):
     u = jax.random.normal(jax.random.PRNGKey(0), (B, L, D), dtype)
     h = jax.random.normal(jax.random.PRNGKey(1), (D, L), jnp.float32) / L
     skip = jax.random.normal(jax.random.PRNGKey(2), (D,), jnp.float32)
-    got = tc.toeplitz_conv(u, h, skip, chunk=C, block_d=8, interpret=True)
-    want = ref.toeplitz_conv(u, h, skip)
+    g = jax.random.normal(jax.random.PRNGKey(3), (B, L, D), dtype) if gated else None
+    got = tc.toeplitz_conv(u, h, skip, g, chunk=C, block_d=8, interpret=True)
+    want = ref.toeplitz_conv(u, h, skip, g)
     np.testing.assert_allclose(
         got.astype(jnp.float32), want.astype(jnp.float32), **tol(dtype)
     )
