@@ -7,6 +7,13 @@ request's slot is reset and immediately refilled from the admission queue,
 so mixed traffic never pays for its slowest member (compare
 ``benchmarks/bench_serving.py`` against the old padded static batch).
 
+``--mesh DxM`` serves mesh-native (DESIGN.md §9): the slot pool shards by
+the rule engine and the decode quantum runs tensor-parallel — force host
+devices to try it on CPU:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python examples/serve_batched.py --mesh 2x4
+
     PYTHONPATH=src python examples/serve_batched.py --arch hyena-153m
 """
 import argparse
@@ -29,13 +36,22 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serve on a (data, model) debug mesh, e.g. 2x4 "
+                    "(needs that many devices)")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(
         get_config(args.arch).reduced(),
         vocab_size=tokenizer.VOCAB_SIZE, frontend=None, frontend_len=0,
     )
-    params, _ = split_params(lm.init_lm(jax.random.PRNGKey(0), cfg))
+    params, axes = split_params(lm.init_lm(jax.random.PRNGKey(0), cfg))
+    ectx = None
+    if args.mesh:
+        from repro.distributed.execution import ExecutionContext
+        from repro.launch.mesh import parse_mesh_arg
+
+        ectx = ExecutionContext(mesh=parse_mesh_arg(args.mesh))
     prompts = [
         "attention is all you need",
         "the quick brown fox",
@@ -47,7 +63,7 @@ def main():
         max_len=max_prompt + args.new_tokens + 1, n_slots=args.slots,
         temperature=args.temperature, top_k=8,
     )
-    eng = ServeEngine(params, cfg, scfg, seed=7)
+    eng = ServeEngine(params, cfg, scfg, seed=7, ectx=ectx, param_axes=axes)
 
     streamed = {}
 

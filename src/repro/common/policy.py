@@ -1,8 +1,10 @@
 """Mixed-precision policy: fp32 master params, bf16 compute, fp32 reductions.
 
 ``cast_compute`` is applied to the parameter tree at the top of each jitted
-step; norms / softmax / FFT run in fp32 internally regardless (handled at the
-op level).
+train step and once at serve-engine construction, via the shared
+``ExecutionContext`` (``repro.distributed.execution``; DESIGN.md §9) —
+gradients flow back to the fp32 masters through the astype vjp.  Norms /
+softmax / FFT run in fp32 internally regardless (handled at the op level).
 """
 from __future__ import annotations
 

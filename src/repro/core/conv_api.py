@@ -172,6 +172,29 @@ def _toeplitz(u, h, skip=None, gate=None):
     return kops.toeplitz_conv(u, h, skip, gate)
 
 
+def _fft_sp(u, h, skip=None):
+    # Sequence-parallel (context-parallel) FFT conv: L sharded over the
+    # 'model' axis, two all-to-alls instead of an L-sized all-gather.
+    # Degrades to the local FFT when there is no ambient mesh, no >1 model
+    # axis, or L does not divide it — so the backend is safe to select
+    # unconditionally (the parity sweep runs it on one device).  The gate
+    # is NOT fused (supports_gate=False): ConvBackend.__call__ applies the
+    # unfused two-pass fallback, keeping the shard_map body gate-free.
+    from repro.core.fftconv import fft_causal_conv
+    from repro.distributed.ctx import current_mesh
+    from repro.distributed.spconv import sp_fft_causal_conv
+
+    mesh = current_mesh()
+    L = u.shape[1]
+    if (
+        mesh is None
+        or mesh.shape.get("model", 1) <= 1
+        or L % mesh.shape["model"] != 0
+    ):
+        return fft_causal_conv(u, h, skip)
+    return sp_fft_causal_conv(u, h, skip, mesh, axis="model")
+
+
 register_conv_backend(ConvBackend(
     name="fft", tag="shard_map_fft", fn=_fft, mesh_aware=True,
     supports_gate=True,
@@ -202,4 +225,11 @@ register_conv_backend(ConvBackend(
     description="chunked block-Toeplitz Pallas MXU kernel (DESIGN.md §2); "
     "gate fused at kernel finalize in VMEM; interpret-mode off-TPU, jnp "
     "oracle on CPU.",
+))
+register_conv_backend(ConvBackend(
+    name="fft_sp", tag="seqpar_fft", fn=_fft_sp, mesh_aware=True,
+    description="sequence-parallel Cooley-Tukey FFT conv (context "
+    "parallelism for 500K-token prefill): L sharded over 'model', two "
+    "all-to-alls instead of an L-sized all-gather; local-FFT fallback "
+    "off-mesh; gate via the registry's unfused two-pass fallback.",
 ))

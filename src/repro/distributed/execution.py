@@ -1,0 +1,204 @@
+"""One execution substrate: the frozen :class:`ExecutionContext`.
+
+Before this module, the repo had three divergent execution paths: the
+trainer threaded an ``ApplyContext`` and relied on ambient ``ctx.shard``
+constraints, the dry-run hand-built parameter/optimizer/cache shardings per
+cell, and the serve engine was mesh-blind.  ``ExecutionContext`` collapses
+them: it extends :class:`repro.models.mixer_api.ApplyContext` (so it flows
+through the model stack unchanged, static under jit) with
+
+  * the mesh (explicit, or ``None`` = single device / ambient),
+  * the mixed-precision :class:`repro.common.policy.Policy`
+    (``cast_compute`` at the top of the train step and the serve engine),
+  * rule-driven sharding for *every* state tree — params, optimizer
+    moments, and decode-cache pools — through one rule engine
+    (``repro.distributed.sharding``; cache rules come from each mixer's
+    ``cache_shard_axes`` spec),
+  * long-prompt routing: :meth:`conv_backend_for` steers Hyena prefill
+    through the sequence-parallel ``fft_sp`` backend when ``L`` exceeds
+    the per-mesh threshold (context parallelism — "Scaling Context
+    Requires Rethinking Attention", PAPERS.md).
+
+Train, serve, dry-run, and the benchmarks all build one of these; sharding
+decisions live here and in ``sharding.py``, nowhere else (DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.common.policy import Policy
+from repro.models.mixer_api import ApplyContext
+
+# Auto threshold for routing prefill through the sequence-parallel FFT conv:
+# route when the per-chip sequence chunk would exceed this many tokens, i.e.
+# L >= SP_TOKENS_PER_CHIP * model_axis_size.  At 16K tokens/chip a 500K
+# prompt routes on any mesh with >= 2-way model parallelism while ordinary
+# serving prompts never do.  $REPRO_SP_MIN_LEN overrides the auto value
+# (0 disables routing) when the context doesn't set sp_min_len explicitly.
+SP_TOKENS_PER_CHIP = 16384
+SP_ENV_VAR = "REPRO_SP_MIN_LEN"
+
+
+def _mesh_or_ambient(mesh):
+    if mesh is not None:
+        return mesh
+    from repro.distributed.ctx import current_mesh
+
+    return current_mesh()
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionContext(ApplyContext):
+    """ApplyContext + mesh + sharding rules + mixed-precision policy.
+
+    Frozen, hashable, static under jit — exactly like the base context.
+    ``mesh`` (inherited) may be ``None``: every method then degrades to the
+    single-device behavior (no shardings, ambient-mesh conv routing), so
+    the same step functions run everywhere.
+    """
+
+    policy: Optional[Policy] = None  # None = caller-controlled dtypes
+    fsdp: bool = False  # ZeRO-3 embed-family dims on the data axes
+    data_axes: Tuple[str, ...] = ("data",)
+    # sequence-parallel prefill threshold: None = auto (SP_TOKENS_PER_CHIP
+    # per chip on the model axis), 0 = never route, else an explicit L
+    sp_min_len: Optional[int] = None
+
+    # ------------------------------------------------------------ precision
+    def cast_compute(self, tree):
+        """Policy-cast a tree (params at the top of a step); identity when
+        no policy is set."""
+        return tree if self.policy is None else self.policy.cast_compute(tree)
+
+    @property
+    def compute_dtype(self):
+        return None if self.policy is None else self.policy.compute_dtype
+
+    # ---------------------------------------------------------- mesh scope
+    def scope(self):
+        """Context manager making ``self.mesh`` the ambient mesh (no-op
+        without one) — host-side entry point for engines and steps."""
+        from repro.distributed import ctx as dctx
+
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return dctx.use_mesh(self.mesh)
+
+    # ---------------------------------------------------- long-prompt conv
+    def sp_threshold(self) -> Optional[int]:
+        """Effective fft_sp routing threshold for this context's mesh:
+        explicit ``sp_min_len`` > ``$REPRO_SP_MIN_LEN`` > the per-mesh auto
+        value.  ``None`` when routing is off (no mesh / no model axis /
+        a zero threshold)."""
+        if self.sp_min_len == 0:
+            return None
+        mesh = _mesh_or_ambient(self.mesh)
+        if mesh is None:
+            return None
+        P = mesh.shape.get("model", 1)
+        if P <= 1:
+            return None
+        if self.sp_min_len is not None:
+            return self.sp_min_len
+        import os
+
+        env = os.environ.get(SP_ENV_VAR)
+        if env is not None:
+            return int(env) or None
+        return SP_TOKENS_PER_CHIP * P
+
+    def conv_backend_for(self, L: int) -> Optional[str]:
+        # an *explicitly configured* backend always wins unless the caller
+        # also opted into routing by setting sp_min_len — auto-routing only
+        # replaces the registry default, never a user/env selection
+        if self.conv_backend is not None and self.sp_min_len is None:
+            return self.conv_backend
+        thresh = self.sp_threshold()
+        if thresh is not None and L >= thresh:
+            mesh = _mesh_or_ambient(self.mesh)
+            if L % mesh.shape["model"] == 0:  # spconv shards L over 'model'
+                return "fft_sp"
+        return self.conv_backend
+
+    # ------------------------------------------------- rule-driven sharding
+    def param_shardings(self, axes_tree, values_tree):
+        """NamedShardings for an Ax-annotated params tree (None mesh →
+        None: callers pass it straight to device_put / jit shardings)."""
+        if self.mesh is None:
+            return None
+        from repro.distributed.sharding import param_shardings
+
+        return param_shardings(
+            axes_tree, values_tree, self.mesh, fsdp=self.fsdp,
+            data_axes=self.data_axes,
+        )
+
+    def state_shardings(self, axes_tree, values_tree):
+        """NamedShardings for an arbitrary (partially annotated) state
+        tree — the generalized engine behind train state and caches."""
+        if self.mesh is None:
+            return None
+        from repro.distributed.sharding import tree_shardings
+
+        return tree_shardings(
+            axes_tree, values_tree, self.mesh, fsdp=self.fsdp,
+            data_axes=self.data_axes,
+        )
+
+    def train_state_shardings(self, param_axes, state):
+        if self.mesh is None:
+            return None
+        from repro.distributed.sharding import train_state_shardings
+
+        return train_state_shardings(
+            param_axes, state, self.mesh, fsdp=self.fsdp,
+            data_axes=self.data_axes,
+        )
+
+    def cache_shardings(self, cfg, caches):
+        """Decode-cache NamedShardings, derived from each mixer's
+        ``cache_shard_axes`` spec through the TP rule engine."""
+        if self.mesh is None:
+            return None
+        from repro.models import lm
+
+        return lm.cache_shardings(
+            cfg, caches, self.mesh, fsdp=self.fsdp, data_axes=self.data_axes
+        )
+
+    def data_sharding(self, ndim: int, dim0: int):
+        """Batch sharding for one input leaf: dim 0 over the data axes when
+        divisible (the 'data' alias expands over pods), else replicated."""
+        if self.mesh is None:
+            return None
+        import numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        mesh = self.mesh
+        batch_axes = tuple(
+            a for a in ("pod", *self.data_axes) if a in mesh.shape
+        )
+        size = int(np.prod([mesh.shape[a] for a in batch_axes]))
+        if batch_axes and dim0 % size == 0:
+            return NamedSharding(
+                mesh, P(batch_axes, *([None] * (ndim - 1)))
+            )
+        slim = tuple(a for a in self.data_axes if a in mesh.shape)
+        ssize = int(np.prod([mesh.shape[a] for a in slim])) if slim else 0
+        if slim and ssize and dim0 % ssize == 0:
+            return NamedSharding(mesh, P(slim, *([None] * (ndim - 1))))
+        return NamedSharding(mesh, P())
+
+    def place(self, tree, shardings):
+        """device_put under this mesh (identity when meshless) — the one
+        call sites use so state lands sharded before the first step."""
+        if self.mesh is None or shardings is None:
+            return tree
+        import jax
+
+        return jax.device_put(tree, shardings)
+
+
+DEFAULT_EXECUTION = ExecutionContext()

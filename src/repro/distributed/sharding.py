@@ -1,12 +1,20 @@
-"""Parameter sharding rules: logical axis names → mesh axes.
+"""State sharding rules: logical axis names → mesh axes.
 
-Every ``init_*`` returns Ax-annotated params; ``param_shardings`` maps the
-logical-axes tree to NamedShardings with:
+The rule engine maps trees of *logical axis annotations* to NamedShardings:
 
   - priority lists per logical name (first candidate that divides wins),
   - no mesh axis reused twice within one tensor's spec,
   - FSDP: "embed"-family weight dims shard over the data axes when enabled
     (ZeRO-3 — required to fit 72B/132B optimizer states on 256 chips).
+
+It is not params-only: :func:`tree_shardings` walks an arbitrary state tree
+(a *partial* axes tree replicates everything it does not name), and two
+derived entry points cover the production state shapes —
+:func:`train_state_shardings` for ``{"params", "opt": {m, v, step}}`` and
+``repro.models.lm.cache_shardings`` for decode-cache pools (logical names
+come from each mixer's ``cache_shard_axes`` spec; DESIGN.md §9).  All of it
+is reached through ``ExecutionContext`` (repro.distributed.execution) so
+sharding decisions live in exactly one place.
 
 Activation sharding is *not* rule-driven — step functions place explicit
 ``ctx.shard`` constraints (DESIGN.md §6).
@@ -35,7 +43,30 @@ TP_RULES: Dict[str, Sequence[Tuple[str, ...]]] = {
     "ssd_state": [],
     "heads": [("model",)],
     "embed": [],  # replicated unless fsdp
+    # decode-cache logical names (mixer ``cache_shard_axes`` specs),
+    # resolved through the same engine so the serving cache shards exactly
+    # like the weights that produce it.  Slot/batch dims take the data
+    # axes (each data-parallel group owns a subset of requests — the
+    # layout big-batch decode cells need to fit HBM); head/channel dims
+    # reuse the TP rules above; per-slot cursors carry NO spec at all and
+    # therefore replicate — every chip needs every slot's position for
+    # RoPE/validity masks.
+    "cache_slots": [("pod", "data")],
+    # long sequence dims (KV rings, hyena operand histories): fallback
+    # shard over whatever axes the preferred dims left (see
+    # RULE_PRIORITY) — data+model for a batch-1 500K ring, model when the
+    # batch took data, nothing when heads/channels already cover model
+    # and slots cover data.  Contracting a time-sharded cache costs a
+    # psum, so it never outranks head/channel sharding; it exists so a
+    # 500K-token cache degrades to sharded-but-slower instead of
+    # replicated-and-OOM (e.g. 8 KV heads on a 16-way model axis).
+    "kv_seq": [("pod", "data", "model"), ("model",), ("pod", "data")],
 }
+# cross-dim assignment order within one tensor: lower value is assigned
+# first (first-divides-wins remains the tie-break at equal priority, in
+# dim order).  Unlisted names default to 0, so parameter resolution is
+# unchanged; "kv_seq" only picks up mesh axes the preferred dims left.
+RULE_PRIORITY: Dict[str, int] = {"kv_seq": 1}
 FSDP_EMBED = ["embed"]  # logical names that take the data axes under fsdp
 
 
@@ -58,9 +89,16 @@ def resolve_spec(
             rules[name] = [tuple(a for a in data_axes if a in mesh.shape)]
     entries = [None] * extra_leading + list(axes)
     shape = tuple(shape)
-    out = []
+    out = [None] * len(entries)
     used: set = set()
-    for dim, name in zip(shape, entries):
+    # assignment order: RULE_PRIORITY first (so e.g. a "heads" dim claims
+    # the model axis before the "kv_seq" fallback), dim position second
+    order = sorted(
+        range(min(len(shape), len(entries))),
+        key=lambda i: (RULE_PRIORITY.get(entries[i], 0), i),
+    )
+    for i in order:
+        dim, name = shape[i], entries[i]
         choice = None
         for cand in rules.get(name, []) if name else []:
             cand = tuple(a for a in cand if a in mesh.shape and a not in used)
@@ -73,7 +111,7 @@ def resolve_spec(
                 choice = cand if len(cand) > 1 else cand[0]
                 used.update(cand)
                 break
-        out.append(choice)
+        out[i] = choice
     while out and out[-1] is None:
         out.pop()
     return P(*out)
@@ -101,7 +139,95 @@ def param_shardings(
         )
         return NamedSharding(mesh, spec)
 
-    is_axes_leaf = lambda a: a is None or (
+    return jax.tree_util.tree_map(
+        one, axes_tree, values_tree, is_leaf=_is_axes_leaf
+    )
+
+
+# ------------------------------------------------- arbitrary state trees
+#
+# ``param_shardings`` requires a fully parallel axes tree.  Real state trees
+# (train state, decode-cache pools) are only *partially* annotated: scalars,
+# cursors, and bookkeeping leaves carry no logical axes.  ``tree_shardings``
+# walks both trees together and replicates everything the axes tree does not
+# name — one rule engine for params, optimizer moments, and serving caches.
+
+def _is_axes_leaf(a) -> bool:
+    return a is None or (
         isinstance(a, tuple) and all(x is None or isinstance(x, str) for x in a)
     )
-    return jax.tree_util.tree_map(one, axes_tree, values_tree, is_leaf=is_axes_leaf)
+
+
+def tree_shardings(
+    axes_tree: Any,
+    values_tree: Any,
+    mesh: Mesh,
+    *,
+    fsdp: bool = False,
+    data_axes: Tuple[str, ...] = ("data",),
+) -> Any:
+    """NamedShardings for an arbitrary state tree.
+
+    ``axes_tree`` is a *partial* mirror of ``values_tree``: where it holds a
+    logical-axes annotation the rules apply (with replicated leading stack
+    dims, as in :func:`param_shardings`); where it holds ``None`` — or stops
+    short of a whole subtree — every leaf below is replicated.  Dict nodes
+    recurse by key; missing keys replicate.
+    """
+    repl = NamedSharding(mesh, P())
+
+    def walk(ax, val):
+        if _is_axes_leaf(ax):
+            if ax is None or not hasattr(val, "ndim"):
+                # no annotation — or an annotation pointing at a subtree
+                # (structure mismatch): replicate everything below
+                return jax.tree_util.tree_map(lambda _: repl, val)
+            extra = val.ndim - len(ax)
+            spec = resolve_spec(
+                ax, val.shape, mesh, fsdp=fsdp, data_axes=data_axes,
+                extra_leading=max(extra, 0),
+            )
+            return NamedSharding(mesh, spec)
+        if isinstance(ax, dict) and isinstance(val, dict):
+            return {
+                k: (walk(ax[k], v) if k in ax
+                    else jax.tree_util.tree_map(lambda _: repl, v))
+                for k, v in val.items()
+            }
+        if isinstance(ax, (list, tuple)) and isinstance(val, (list, tuple)):
+            out = [walk(a, v) for a, v in zip(ax, val)]
+            out += [
+                jax.tree_util.tree_map(lambda _: repl, v)
+                for v in val[len(ax):]
+            ]
+            return type(val)(out) if isinstance(val, tuple) else out
+        # structure mismatch (e.g. annotated subtree vs bare leaf): replicate
+        return jax.tree_util.tree_map(lambda _: repl, val)
+
+    return walk(axes_tree, values_tree)
+
+
+def train_state_shardings(
+    param_axes: Any,
+    state: Any,
+    mesh: Mesh,
+    *,
+    fsdp: bool = False,
+    data_axes: Tuple[str, ...] = ("data",),
+) -> Any:
+    """Shardings for the canonical train state ``{"params", "opt"}``.
+
+    Adam moments mirror the parameter layout (they are elementwise functions
+    of the grads — co-locating them is what makes FSDP/ZeRO-3 fit); every
+    other opt leaf (step counters etc.) replicates.
+    """
+    axes = {
+        "params": param_axes,
+        "opt": {
+            k: (param_axes if k in ("m", "v") else None)
+            for k in state.get("opt", {})
+        },
+    }
+    return tree_shardings(
+        axes, state, mesh, fsdp=fsdp, data_axes=data_axes
+    )

@@ -36,18 +36,18 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.common.param import split_params
 from repro.configs import get_config
 from repro.configs.registry import ASSIGNED
-from repro.configs.shapes import SHAPES, input_specs, token_specs
+from repro.configs.shapes import SHAPES, token_specs
 from repro.core.conv_api import resolve_conv_backend
 from repro.distributed import ctx
-from repro.distributed.sharding import param_shardings
+from repro.distributed.execution import ExecutionContext
 from repro.launch.mesh import make_production_mesh
 from repro.models import lm
-from repro.models.mixer_api import ApplyContext, resolve_remat_policy
+from repro.models.mixer_api import resolve_remat_policy
 from repro.train import optim as O
 from repro.train.trainer import TrainConfig, make_train_step
 
@@ -118,54 +118,10 @@ def abstract_params(cfg, serve: bool = False):
     return vals, captured["axes"]
 
 
-def data_spec(mesh: Mesh, ndim: int, dim0: int) -> NamedSharding:
-    """Batch sharding over the data axes, replicating when the batch does
-    not divide (e.g. long_500k's global_batch=1)."""
-    batch_axes = ("pod", "data") if "pod" in mesh.shape else ("data",)
-    size = int(np.prod([mesh.shape[a] for a in batch_axes]))
-    if dim0 % size != 0:
-        if dim0 % mesh.shape.get("data", 1) == 0:
-            batch_axes = ("data",)
-        else:
-            return NamedSharding(mesh, P())
-    return NamedSharding(mesh, P(batch_axes, *([None] * (ndim - 1))))
-
-
-def cache_sharding_tree(cache_struct, mesh: Mesh, batch: int):
-    """Heuristic decode-cache shardings: the batch-sized dim takes the data
-    axes; the longest remaining dim ≥ 1024 (the sequence dim) takes 'model'
-    (and the data axes too when batch=1, e.g. long_500k)."""
-    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
-    data_size = int(np.prod([mesh.shape[a] for a in data_axes]))
-    model_size = mesh.shape.get("model", 1)
-
-    def one(leaf):
-        spec = [None] * leaf.ndim
-        used_data = False
-        if batch > 1:
-            for i, d in enumerate(leaf.shape):
-                if d == batch and d % data_size == 0:
-                    spec[i] = data_axes
-                    used_data = True
-                    break
-        # sequence dim: longest dim >= 1024
-        cand = [
-            (d, i) for i, d in enumerate(leaf.shape)
-            if spec[i] is None and d >= 1024
-        ]
-        if cand:
-            d, i = max(cand)
-            axes = ("model",) if used_data else tuple(
-                a for a in (*data_axes, "model")
-            )
-            size = int(np.prod([mesh.shape[a] for a in axes]))
-            if d % size == 0:
-                spec[i] = axes if len(axes) > 1 else axes[0]
-            elif d % model_size == 0:
-                spec[i] = "model"
-        return NamedSharding(mesh, P(*spec))
-
-    return jax.tree_util.tree_map(one, cache_struct)
+# Sharding decisions all come from the shared ExecutionContext (rule
+# engine in repro.distributed.sharding; decode caches from the mixers'
+# cache_shard_axes specs) — this module used to carry its own heuristic
+# cache-sharding tree and hand-built optimizer-state shardings.
 
 
 # ------------------------------------------------------------- cell runner
@@ -208,32 +164,34 @@ def build_step(cfg, shape_name: str, mesh: Mesh, *, unroll=False, probe_groups=N
             conv_backend=resolve_conv_backend(),
             remat_policy=resolve_remat_policy(),
         )
+        ectx = tcfg.apply_context(mesh=mesh)
         params, axes = abstract_params(run_cfg)
         opt_struct = {
             "m": params, "v": params,
             "step": jax.ShapeDtypeStruct((), jnp.int32),
         }
         state = {"params": params, "opt": opt_struct}
-        pshard = param_shardings(axes, params, mesh, fsdp=True)
-        state_shard = {
-            "params": pshard,
-            "opt": {"m": pshard, "v": pshard,
-                    "step": NamedSharding(mesh, P())},
-        }
+        state_shard = ectx.train_state_shardings(axes, state)
         specs = token_specs(run_cfg, shape)
         batch = {k: v for k, v in specs.items()}
-        batch_shard = {k: data_spec(mesh, v.ndim, v.shape[0]) for k, v in batch.items()}
+        batch_shard = {
+            k: ectx.data_sharding(v.ndim, v.shape[0])
+            for k, v in batch.items()
+        }
         step = make_train_step(run_cfg, tcfg)
         return step, (state, batch), (state_shard, batch_shard), (0,)
     if shape.kind == "prefill":
-        params, axes = abstract_params(run_cfg, serve=True)
-        pshard = param_shardings(axes, params, mesh, fsdp=True)
-        specs = token_specs(run_cfg, shape)
-        batch_shard = {k: data_spec(mesh, v.ndim, v.shape[0]) for k, v in specs.items()}
-
-        fwd_ctx = ApplyContext(
-            conv_backend=resolve_conv_backend(), unroll=unroll
+        fwd_ctx = ExecutionContext(
+            conv_backend=resolve_conv_backend(), unroll=unroll,
+            mesh=mesh, fsdp=True,
         )
+        params, axes = abstract_params(run_cfg, serve=True)
+        pshard = fwd_ctx.param_shardings(axes, params)
+        specs = token_specs(run_cfg, shape)
+        batch_shard = {
+            k: fwd_ctx.data_sharding(v.ndim, v.shape[0])
+            for k, v in specs.items()
+        }
 
         def fwd(params, batch):
             logits, _ = lm.forward(
@@ -244,13 +202,14 @@ def build_step(cfg, shape_name: str, mesh: Mesh, *, unroll=False, probe_groups=N
 
         return fwd, (params, specs), (pshard, batch_shard), ()
     # decode
+    serve_ctx = ExecutionContext(unroll=unroll, mesh=mesh, fsdp=True)
     params, axes = abstract_params(run_cfg, serve=True)
-    pshard = param_shardings(axes, params, mesh, fsdp=True)
+    pshard = serve_ctx.param_shardings(axes, params)
     dspecs = input_specs_decode(run_cfg, shape)
-    cshard = cache_sharding_tree(dspecs["caches"], mesh, shape.batch)
-    tok_shard = data_spec(mesh, 1, shape.batch)
-
-    serve_ctx = ApplyContext(unroll=unroll)
+    # rule-driven decode-cache shardings from the mixers' cache_shard_axes
+    # specs — the exact layout the mesh-native ServeEngine holds its pool in
+    cshard = serve_ctx.cache_shardings(run_cfg, dspecs["caches"])
+    tok_shard = serve_ctx.data_sharding(1, shape.batch)
 
     def serve_fn(params, token, caches):
         return lm.decode_step(params, run_cfg, token, caches, ctx=serve_ctx)

@@ -20,3 +20,15 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(n_data: int = 2, n_model: int = 4):
     """Small mesh for in-process distributed tests (host devices)."""
     return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def parse_mesh_arg(spec: str):
+    """``"DxM"`` CLI string -> debug mesh (shared by the serving example
+    and the benchmarks, so the mesh-flag syntax lives in one place)."""
+    parts = spec.lower().split("x")
+    if len(parts) != 2 or not all(p.isdigit() and int(p) > 0 for p in parts):
+        raise ValueError(
+            f"mesh spec must be 'DxM' with positive ints (e.g. 2x4), "
+            f"got {spec!r}"
+        )
+    return make_debug_mesh(int(parts[0]), int(parts[1]))

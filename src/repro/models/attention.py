@@ -140,13 +140,18 @@ def apply_attention(
     q = dense(params["q"], x).reshape(B, L, H, Dh)
     k = dense(params["k"], x).reshape(B, L, Hkv, Dh)
     v = dense(params["v"], x).reshape(B, L, Hkv, Dh)
-    pos = jnp.arange(L) + pos_offset
-    q = apply_rope(q, pos, cfg.rope_theta)
-    k = apply_rope(k, pos, cfg.rope_theta)
-    # context parallelism: queries sharded over model axis, KV replicated
+    # context parallelism: queries sharded over model axis, KV replicated.
+    # The constraints sit BEFORE RoPE on purpose: a model-sharded qkv
+    # weight leaves its activation sharded on the flattened (H·Dh) dim,
+    # i.e. split *inside* a head, and rope's split/concat must never see
+    # that layout (XLA SPMD mis-partitions it; heads-whole layouts are
+    # safe) — same reason the serve path constrains in attention_prefill.
     q = shard(q, "data", "model", None, None)
     k = shard(k, "data", None, None, None)
     v = shard(v, "data", None, None, None)
+    pos = jnp.arange(L) + pos_offset
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
     o = chunked_attention(
         q, k, v, causal=True, window=cfg.window, q_offset=pos_offset,
         chunk_kv=cfg.chunk_kv,
@@ -167,6 +172,12 @@ def attention_prefill(
     q = dense(params["q"], x).reshape(B, L, H, Dh)
     k = dense(params["k"], x).reshape(B, L, Hkv, Dh)
     v = dense(params["v"], x).reshape(B, L, Hkv, Dh)
+    # serve-side layout pin, before RoPE: whole heads on the model axis
+    # (never a split Dh — see apply_attention) and the KV layout matching
+    # the rule-derived cache sharding the lines below scatter into
+    q = shard(q, "data", None, "model", None)
+    k = shard(k, "data", None, "model", None)
+    v = shard(v, "data", None, "model", None)
     pos = jnp.arange(L) + pos_offset
     q = apply_rope(q, pos, cfg.rope_theta)
     k = apply_rope(k, pos, cfg.rope_theta)
@@ -213,6 +224,10 @@ def attention_decode_step(
     q = dense(params["q"], x_t).reshape(B, 1, H, Dh)
     k = dense(params["k"], x_t).reshape(B, 1, Hkv, Dh)
     v = dense(params["v"], x_t).reshape(B, 1, Hkv, Dh)
+    # same pre-RoPE layout pin as prefill: heads whole, Dh never split
+    q = shard(q, "data", None, "model", None)
+    k = shard(k, "data", None, "model", None)
+    v = shard(v, "data", None, "model", None)
     pos = t[:, None].astype(jnp.int32)  # (B, 1) one position per row
     q = apply_rope(q, pos, cfg.rope_theta)
     k = apply_rope(k, pos, cfg.rope_theta)
@@ -273,6 +288,19 @@ class AttentionMixer(TokenMixer):
 
     def decode_step(self, params, mc, h_t, cache):
         return attention_decode_step(params, mc, h_t, cache)
+
+    def cache_shard_axes(self, mc) -> dict:
+        # KV ring buffers shard over the model axis on the head dim (the
+        # decode einsums contract per KV head); when the head count can't
+        # divide it (GQA: 8 KV heads on a 16-way axis), the lower-priority
+        # "kv_seq" rule shards the ring's time dim instead, so a 500K-token
+        # cache never falls back to full per-chip replication.  Write
+        # cursors replicate — every chip needs every slot's position for
+        # its RoPE/validity mask.
+        return {
+            "k": ("cache_slots", "kv_seq", "heads", None),
+            "v": ("cache_slots", "kv_seq", "heads", None),
+        }
 
     def state_bytes(self, cfg, max_len: int) -> int:
         mc = self.make_config(cfg)

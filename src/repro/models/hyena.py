@@ -61,7 +61,9 @@ def apply_hyena_mixer(
     xs = [shard(xn, "data", None, "model") for xn in xs]
     h = F.evaluate_filters(params["filters"], cfg.filter, L)  # (N, D, L)
     skip = F.filter_skip(params["filters"], cfg.filter)
-    backend = get_conv_backend(ctx.conv_backend)
+    # length-aware routing: an ExecutionContext steers long sequences onto
+    # the sequence-parallel fft_sp backend past its per-mesh threshold
+    backend = get_conv_backend(ctx.conv_backend_for(L))
     backend.validate_len(L)
     for n in range(N):
         hn = shard(h[n], "model", None)  # depthwise: channel-sharded filter
@@ -182,7 +184,8 @@ class HyenaMixer(TokenMixer):
                 "hyena prefill does not support pos_offset != 0"
             )
         return hyena_prefill(
-            params, mc, h, max_len, dtype, conv_backend=ctx.conv_backend
+            params, mc, h, max_len, dtype,
+            conv_backend=ctx.conv_backend_for(h.shape[1]),
         )
 
     def decode_step(self, params, mc, h_t, cache):
@@ -193,6 +196,19 @@ class HyenaMixer(TokenMixer):
         # dim; the decode filter taps "h"/"skip" depend only on params and
         # the max_len grid, so the pool shares one copy across slots.
         return {"long": 1, "h": -1, "skip": -1}
+
+    def cache_shard_axes(self, mc) -> dict:
+        # depthwise conv: every cache leaf's channel dim shards over the
+        # model axis collective-free (the decode dot contracts per channel);
+        # the operand-history time dim and the slot dim replicate.  "short"
+        # holds the (N+1)·D projected-input history — the in_proj output
+        # dim — so it reuses the hyena_inner rule.
+        return {
+            "short": ("cache_slots", None, "hyena_inner"),
+            "long": (None, "cache_slots", "kv_seq", "hyena_channels"),
+            "h": (None, "hyena_channels", "kv_seq"),
+            "skip": (None, "hyena_channels"),
+        }
 
     def state_bytes(self, cfg, max_len: int) -> int:
         mc = self.make_config(cfg)

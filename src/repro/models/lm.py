@@ -321,6 +321,47 @@ def cache_slot_axes(cfg: ModelConfig, caches) -> Dict[str, Any]:
     return axes
 
 
+def cache_shard_axes(cfg: ModelConfig, caches) -> Dict[str, Any]:
+    """Pytree of logical-axes tuples (or None = replicate) matching
+    ``caches``, collected from each mixer's ``cache_shard_axes`` spec.
+
+    The spec describes the *unstacked* per-layer leaf; scan-stacked group
+    caches carry one extra leading dim, which the rule engine treats as a
+    replicated stack dim (same convention as scan-stacked params)."""
+    from repro.models.mixer_api import get_mixer
+
+    def axes_for(mixer: str, cache):
+        m = get_mixer(mixer)
+        spec = m.cache_shard_axes(m.make_config(cfg))
+        return {k: spec.get(k) for k in cache}
+
+    axes: Dict[str, Any] = {
+        "groups": [
+            axes_for(mx, caches["groups"][p])
+            for p, mx in enumerate(cfg.pattern)
+        ]
+    }
+    if "tail" in caches:
+        axes["tail"] = [
+            axes_for(mx, caches["tail"][i])
+            for i, mx in enumerate(tail_mixers(cfg))
+        ]
+    return axes
+
+
+def cache_shardings(cfg: ModelConfig, caches, mesh, *, fsdp: bool = False,
+                    data_axes: Tuple[str, ...] = ("data",)):
+    """Rule-driven NamedShardings for a decode-cache tree (works on value
+    trees and on ShapeDtypeStruct trees alike): model-axis-sharded
+    heads/channels, replicated cursors — DESIGN.md §9."""
+    from repro.distributed.sharding import tree_shardings
+
+    return tree_shardings(
+        cache_shard_axes(cfg, caches), caches, mesh,
+        fsdp=fsdp, data_axes=data_axes,
+    )
+
+
 def make_slot_pool(cfg: ModelConfig, one_cache, n_slots: int):
     """Expand a single-request cache (e.g. the first prefill's, batch 1)
     into an ``n_slots``-wide zeroed pool; shared leaves keep one copy.

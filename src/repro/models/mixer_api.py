@@ -85,6 +85,14 @@ class ApplyContext:
                 f"have {REMAT_POLICIES}"
             )
 
+    def conv_backend_for(self, L: int) -> Optional[str]:
+        """Long-conv backend for a length-``L`` pass.  The base context has
+        no length-dependent routing; ``ExecutionContext``
+        (repro.distributed.execution) overrides this to steer long-prompt
+        prefill through the sequence-parallel ``fft_sp`` backend when ``L``
+        exceeds the per-mesh threshold."""
+        return self.conv_backend
+
 
 DEFAULT_CONTEXT = ApplyContext()
 
@@ -148,6 +156,18 @@ class TokenMixer:
     def cache_slot_axes(self, mc) -> Dict[str, int]:
         """Slot (batch) axis per cache key.  Missing keys default to axis
         0; ``-1`` marks a leaf shared across slots (never sliced/reset)."""
+        return {}
+
+    def cache_shard_axes(self, mc) -> Dict[str, Tuple[Optional[str], ...]]:
+        """Logical axis names per cache key, for rule-driven decode-cache
+        sharding (DESIGN.md §9): one tuple per key, parallel to the leaf's
+        dims (``None`` = no rule for that dim).  Names resolve through the
+        same TP rule engine as the parameters
+        (``repro.distributed.sharding.TP_RULES``) — head/channel dims land
+        on the model axis, ``"cache_slots"`` and cursor dims replicate.
+        Keys left out of the spec are fully replicated; the conformance
+        suite asserts every named key exists in the cache with a matching
+        rank."""
         return {}
 
     def cache_slice(self, mc, cache, slot):

@@ -174,6 +174,14 @@ class RGLRUMixer(TokenMixer):
     def decode_step(self, params, mc, h_t, cache):
         return rglru_decode_step(params, mc, h_t, cache)
 
+    def cache_shard_axes(self, mc) -> dict:
+        # RG-LRU recurrence and conv history are elementwise over the RNN
+        # width — shard it over model, replicate slots and cursors
+        return {
+            "conv": ("cache_slots", None, "rnn_hidden"),
+            "h": ("cache_slots", "rnn_hidden"),
+        }
+
     def state_bytes(self, cfg, max_len: int) -> int:
         mc = self.make_config(cfg)
         W = mc.width

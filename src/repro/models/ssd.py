@@ -275,6 +275,14 @@ class SSDMixer(TokenMixer):
     def decode_step(self, params, mc, h_t, cache):
         return ssd_decode_step(params, mc, h_t, cache)
 
+    def cache_shard_axes(self, mc) -> dict:
+        # the SSM state shards over heads (the recurrence is per-head);
+        # the short-conv history's channel dim is the concatenated
+        # x/B/C projection — no clean logical axis, so it replicates
+        return {
+            "state": ("cache_slots", "heads", None, None),
+        }
+
     def state_bytes(self, cfg, max_len: int) -> int:
         mc = self.make_config(cfg)
         conv_ch = mc.d_inner + 2 * mc.n_groups * mc.d_state

@@ -2,6 +2,17 @@
 attention, O(L) conv cache for Hyena, O(1) recurrent state for SSD /
 RG-LRU).
 
+Serving is **mesh-native** (DESIGN.md §9): construct the engine with an
+``ExecutionContext`` carrying a mesh and the slot pool lives sharded by the
+rule engine (model-axis heads/channels from each mixer's
+``cache_shard_axes`` spec, replicated cursors), the decode quantum runs
+tensor-parallel with donated sharded buffers, prefill routes long prompts
+through the sequence-parallel ``fft_sp`` conv, and sampling replicates the
+small ``(S, V)`` logits once per step to handle the vocab-sharded LM head.
+Without a mesh every path degrades to the single-device program — the
+token streams are identical either way (property-tested on a 2×4 debug
+mesh in tests/test_serve_distributed.py).
+
 Two tiers (DESIGN.md §4):
 
   * :func:`generate` — the static-batch path: every request in the batch
@@ -38,10 +49,13 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.common.policy import Policy
 from repro.configs.base import ModelConfig
+from repro.distributed.execution import ExecutionContext
 from repro.models import lm
-from repro.models.mixer_api import ApplyContext, get_mixer
+from repro.models.mixer_api import get_mixer
 from repro.serve.sampling import sample, sample_slots
 from repro.serve.scheduler import Backend, Request, SamplingParams, Scheduler
 
@@ -61,6 +75,9 @@ class ServeConfig:
     # hyena long-conv backend for the *prefill* pass (decode steps are
     # cached dots — no long conv to select)
     conv_backend: Optional[str] = None
+    # mixed precision: None derives Policy(compute_dtype=cache_dtype) —
+    # serving holds policy-cast weights (cast once at engine construction)
+    policy: Optional[Policy] = None
 
     def __post_init__(self):
         self.apply_context()  # unknown backend names fail here, not on the
@@ -72,15 +89,30 @@ class ServeConfig:
                 f"decode_quantum must be >= 1, got {self.decode_quantum}"
             )
 
-    def apply_context(self) -> ApplyContext:
-        """Serving's single resolution point for execution options."""
-        return ApplyContext(conv_backend=self.conv_backend)
+    def apply_context(self, mesh=None) -> ExecutionContext:
+        """Serving's single resolution point for execution options — the
+        same ExecutionContext substrate training runs on (DESIGN.md §9).
+        Pass a mesh to serve tensor-parallel."""
+        return ExecutionContext(
+            conv_backend=self.conv_backend,
+            mesh=mesh,
+            policy=self.policy or Policy(compute_dtype=self.cache_dtype),
+        )
 
 
-def serve_step(params, cfg: ModelConfig, token, caches,
-               ctx: Optional[ApplyContext] = None):
+def serve_step(params, cfg: ModelConfig, token, caches, ctx=None):
     """(B,) int32 new token -> (logits (B, V), updated caches)."""
     return lm.decode_step(params, cfg, token, caches, ctx=ctx)
+
+
+def _replicate_logits(logits, ctx):
+    """The LM head leaves logits vocab-sharded over 'model'; sampling
+    argsorts over V, so gather the small (S, V) block once per step instead
+    of letting GSPMD re-derive a layout per sort."""
+    mesh = getattr(ctx, "mesh", None)
+    if mesh is None:
+        return logits
+    return jax.lax.with_sharding_constraint(logits, NamedSharding(mesh, P()))
 
 
 # ------------------------------------------------------------- PRNG streams
@@ -111,9 +143,11 @@ def generate(
     the whole batch — the padded baseline ``ServeEngine`` improves on."""
     key = key if key is not None else jax.random.PRNGKey(0)
     ctx = scfg.apply_context()
+    params = ctx.cast_compute(params)  # policy-cast, same as ServeEngine
+    compute = ctx.compute_dtype or scfg.cache_dtype
     logits, caches = lm.prefill(
         params, cfg, prompts, scfg.max_len, frontend_embeds,
-        dtype=scfg.cache_dtype, ctx=ctx,
+        dtype=scfg.cache_dtype, compute_dtype=compute, ctx=ctx,
     )
     first = sample(key, logits[:, -1], temperature=scfg.temperature,
                    top_k=scfg.top_k)
@@ -121,8 +155,7 @@ def generate(
     def body(carry, k):
         token, caches = carry
         lg, caches = lm.decode_step(
-            params, cfg, token, caches, compute_dtype=scfg.cache_dtype,
-            ctx=ctx,
+            params, cfg, token, caches, compute_dtype=compute, ctx=ctx,
         )
         nxt = sample(k, lg, temperature=scfg.temperature, top_k=scfg.top_k)
         return (nxt, caches), token
@@ -154,28 +187,35 @@ def _donate_pool_args() -> bool:
 )
 def _prefill_and_sample(
     params, prompt, temp, topk, rid, count, base_key,
-    *, cfg: ModelConfig, ctx: ApplyContext, dtype, max_len: int,
+    *, cfg: ModelConfig, ctx, dtype, max_len: int,
 ):
     """Prefill one request (batch 1) and sample its first token with the
     request's own key stream.  Returns (token (), cache).
+
+    Under a mesh context this is the tensor-parallel prefill: activations
+    follow the ``ctx.shard`` constraints, long prompts route through the
+    sequence-parallel ``fft_sp`` conv past ``ctx.sp_threshold()``, and the
+    last-token logits are gathered before sampling.
 
     NOTE: jit specializes on the exact prompt length, so a server seeing
     unbounded distinct lengths accumulates one compile per length.  Length
     bucketing is NOT a drop-in fix: left-padding would feed pad tokens into
     the conv / recurrent mixer states (only attention can mask them), so a
     bounded-compile prefill needs per-mixer pad masking first."""
+    compute = getattr(ctx, "compute_dtype", None) or dtype
     logits, cache = lm.prefill(
-        params, cfg, prompt, max_len, dtype=dtype, compute_dtype=dtype,
+        params, cfg, prompt, max_len, dtype=dtype, compute_dtype=compute,
         ctx=ctx,
     )
     key = request_token_key(base_key, rid, count)
-    tok = sample_slots(key[None], logits[:, -1], temp, topk)
+    lg = _replicate_logits(logits[:, -1], ctx)
+    tok = sample_slots(key[None], lg, temp, topk)
     return tok[0], cache
 
 
 def _decode_and_sample_impl(
     params, tokens, caches, active, temps, topks, rids, counts, base_key,
-    *, cfg: ModelConfig, ctx: ApplyContext, dtype, quantum: int,
+    *, cfg: ModelConfig, ctx, dtype, quantum: int,
     sampled: bool, truncated: bool,
 ):
     """``quantum`` slot-masked decode steps over the whole pool (one fused
@@ -189,13 +229,19 @@ def _decode_and_sample_impl(
     (static, False when every resident request is greedy) skips the
     per-slot top-k sorts and gumbel draw entirely on the common
     temperature-0 path.
+
+    Under a mesh context the pool stays sharded through the scan (the
+    engine constrains it to the rule-derived layout at entry and exit) and
+    the vocab-sharded logits are gathered before sampling.
     """
+    compute = getattr(ctx, "compute_dtype", None) or dtype
 
     def body(carry, _):
         tok, caches, counts = carry
         logits, new_caches = lm.decode_step(
-            params, cfg, tok, caches, compute_dtype=dtype, ctx=ctx,
+            params, cfg, tok, caches, compute_dtype=compute, ctx=ctx,
         )
+        logits = _replicate_logits(logits, ctx)
         new_caches = lm.mask_slots(cfg, new_caches, caches, active)
         if sampled:
             keys = jax.vmap(
@@ -260,10 +306,17 @@ class ServeEngine(Backend):
     batch-wide ``jax.random.split``.
 
     ``stream`` callbacks fire per emitted token as ``cb(rid, token, done)``.
+
+    Mesh-native serving: pass ``ectx`` (an ``ExecutionContext`` with a
+    mesh) and, to place the weights, the ``param_axes`` tree from
+    ``split_params``.  The slot pool is then held in the rule-derived
+    sharded layout, the decode quantum runs tensor-parallel, and outputs
+    stay token-identical to the meshless engine.
     """
 
     def __init__(self, params, cfg: ModelConfig, scfg: ServeConfig,
-                 *, seed: int = 0):
+                 *, seed: int = 0,
+                 ectx: Optional[ExecutionContext] = None, param_axes=None):
         for m in cfg.pattern:
             if not get_mixer(m).supports_decode:
                 raise ValueError(
@@ -278,14 +331,34 @@ class ServeEngine(Backend):
                 "strip the frontend (frontend=None, frontend_len=0) or use "
                 "the static generate(frontend_embeds=...) path"
             )
-        self.params = params
         self.cfg = cfg
         self.scfg = scfg
-        self.ctx = scfg.apply_context()
+        ctx = ectx if ectx is not None else scfg.apply_context()
+        # merge ServeConfig execution options into an externally built
+        # context wherever the context doesn't set its own: the mesh engine
+        # must honor the same policy/backend as the meshless engine and the
+        # generate() reference, or mesh-vs-meshless token identity breaks
+        # for any non-default ServeConfig
+        if ctx.policy is None:
+            ctx = dataclasses.replace(
+                ctx, policy=scfg.policy
+                or Policy(compute_dtype=scfg.cache_dtype)
+            )
+        if ctx.conv_backend is None and scfg.conv_backend is not None:
+            ctx = dataclasses.replace(ctx, conv_backend=scfg.conv_backend)
+        self.ctx = ctx
+        params = ctx.cast_compute(params)  # serving holds policy-cast weights
+        if ctx.mesh is not None and param_axes is not None:
+            params = ctx.place(
+                params, ctx.param_shardings(param_axes, params)
+            )
+        self.params = params
         self._base_key = jax.random.PRNGKey(seed)
         S = scfg.n_slots
         self.scheduler = Scheduler(S)
         self.pool = None  # built lazily from the first prefill's cache
+        self._pool_shardings = None  # rule-derived, mesh engines only
+        self._mesh_ops = None  # per-engine jitted (decode, insert, reset)
         self._last_tok = np.zeros((S,), np.int32)  # last emitted, per slot
         self._requests: Dict[int, Request] = {}  # queued + resident only
         self._results: Dict[int, np.ndarray] = {}  # finished
@@ -386,25 +459,94 @@ class ServeEngine(Backend):
         valve for servers that run one engine indefinitely."""
         return self._results.pop(rid)
 
+    # --------------------------------------------------- pool op selection
+    def _pool_ops(self):
+        """(decode, insert, reset) jitted workers.  Meshless engines share
+        the module-level jit cache; mesh engines build per-engine wrappers
+        that pin the pool to its rule-derived sharded layout on entry and
+        exit (donation then updates the sharded buffers in place)."""
+        if self.ctx.mesh is None:
+            return _jitted_pool_ops()
+        if self._mesh_ops is None:
+            shardings = self._pool_shardings
+
+            def constrain(caches):
+                return jax.tree_util.tree_map(
+                    lambda s, x: jax.lax.with_sharding_constraint(x, s),
+                    shardings, caches,
+                )
+
+            def decode_impl(params, tokens, caches, active, temps, topks,
+                            rids, counts, base_key, *, cfg, ctx, dtype,
+                            quantum, sampled, truncated):
+                toks, out = _decode_and_sample_impl(
+                    params, tokens, constrain(caches), active, temps,
+                    topks, rids, counts, base_key, cfg=cfg, ctx=ctx,
+                    dtype=dtype, quantum=quantum, sampled=sampled,
+                    truncated=truncated,
+                )
+                return toks, constrain(out)
+
+            def insert_impl(caches, slot, one, *, cfg):
+                return constrain(
+                    _pool_insert_impl(constrain(caches), slot, one, cfg=cfg)
+                )
+
+            def reset_impl(caches, slot, *, cfg):
+                return constrain(
+                    _pool_reset_impl(constrain(caches), slot, cfg=cfg)
+                )
+
+            donate = _donate_pool_args()
+            self._mesh_ops = (
+                jax.jit(
+                    decode_impl,
+                    static_argnames=(
+                        "cfg", "ctx", "dtype", "quantum", "sampled",
+                        "truncated",
+                    ),
+                    donate_argnums=(2,) if donate else (),
+                ),
+                jax.jit(
+                    insert_impl, static_argnames=("cfg",),
+                    donate_argnums=(0,) if donate else (),
+                ),
+                jax.jit(
+                    reset_impl, static_argnames=("cfg",),
+                    donate_argnums=(0,) if donate else (),
+                ),
+            )
+        return self._mesh_ops
+
     # ----------------------------------------------- scheduler Backend API
     def prefill_into_slot(self, slot: int, req: Request) -> int:
         prompt = req.resume_prompt[None, :]  # (1, L) exact length
-        tok, cache = _prefill_and_sample(
-            self.params, jnp.asarray(prompt),
-            jnp.asarray([req.params.temperature], jnp.float32),
-            jnp.asarray([req.params.top_k], jnp.int32),
-            jnp.asarray(req.rid, jnp.int32),
-            jnp.asarray(req.n_emitted, jnp.int32),
-            self._base_key,
-            cfg=self.cfg, ctx=self.ctx, dtype=self.scfg.cache_dtype,
-            max_len=self.scfg.max_len,
-        )
-        if self.pool is None:
-            self.pool = lm.make_slot_pool(self.cfg, cache, self.scfg.n_slots)
-        _, insert, _ = _jitted_pool_ops()
-        self.pool = insert(
-            self.pool, jnp.asarray(slot, jnp.int32), cache, cfg=self.cfg
-        )
+        with self.ctx.scope():
+            tok, cache = _prefill_and_sample(
+                self.params, jnp.asarray(prompt),
+                jnp.asarray([req.params.temperature], jnp.float32),
+                jnp.asarray([req.params.top_k], jnp.int32),
+                jnp.asarray(req.rid, jnp.int32),
+                jnp.asarray(req.n_emitted, jnp.int32),
+                self._base_key,
+                cfg=self.cfg, ctx=self.ctx, dtype=self.scfg.cache_dtype,
+                max_len=self.scfg.max_len,
+            )
+            if self.pool is None:
+                pool = lm.make_slot_pool(self.cfg, cache, self.scfg.n_slots)
+                if self.ctx.mesh is not None:
+                    # the pool is born in the rule-derived sharded layout
+                    # (model-axis heads/channels, replicated cursors) and
+                    # every jitted update keeps it there
+                    self._pool_shardings = self.ctx.cache_shardings(
+                        self.cfg, pool
+                    )
+                    pool = self.ctx.place(pool, self._pool_shardings)
+                self.pool = pool
+            _, insert, _ = self._pool_ops()
+            self.pool = insert(
+                self.pool, jnp.asarray(slot, jnp.int32), cache, cfg=self.cfg
+            )
         tok = int(tok)
         self._last_tok[slot] = tok
         return tok
@@ -422,16 +564,17 @@ class ServeEngine(Backend):
             topks[slot] = req.params.top_k
             rids[slot] = req.rid
             counts[slot] = req.n_emitted  # index of the token sampled now
-        decode, _, _ = _jitted_pool_ops()
-        toks, self.pool = decode(
-            self.params, jnp.asarray(self._last_tok), self.pool,
-            jnp.asarray(active), jnp.asarray(temps), jnp.asarray(topks),
-            jnp.asarray(rids), jnp.asarray(counts), self._base_key,
-            cfg=self.cfg, ctx=self.ctx, dtype=self.scfg.cache_dtype,
-            quantum=self.scfg.decode_quantum,
-            sampled=bool((temps > 0.0).any()),
-            truncated=bool((topks > 0).any()),
-        )
+        decode, _, _ = self._pool_ops()
+        with self.ctx.scope():
+            toks, self.pool = decode(
+                self.params, jnp.asarray(self._last_tok), self.pool,
+                jnp.asarray(active), jnp.asarray(temps), jnp.asarray(topks),
+                jnp.asarray(rids), jnp.asarray(counts), self._base_key,
+                cfg=self.cfg, ctx=self.ctx, dtype=self.scfg.cache_dtype,
+                quantum=self.scfg.decode_quantum,
+                sampled=bool((temps > 0.0).any()),
+                truncated=bool((topks > 0).any()),
+            )
         toks = np.asarray(toks)  # (quantum, S)
         out: Dict[int, list] = {}
         for slot in requests:
@@ -441,7 +584,8 @@ class ServeEngine(Backend):
 
     def reset_slot(self, slot: int) -> None:
         if self.pool is not None:
-            _, _, reset = _jitted_pool_ops()
-            self.pool = reset(
-                self.pool, jnp.asarray(slot, jnp.int32), cfg=self.cfg
-            )
+            _, _, reset = self._pool_ops()
+            with self.ctx.scope():
+                self.pool = reset(
+                    self.pool, jnp.asarray(slot, jnp.int32), cfg=self.cfg
+                )

@@ -1,10 +1,14 @@
-"""Training step factory: microbatch gradient accumulation, mixed precision,
-optional int8 error-feedback gradient compression on the cross-pod axis,
-jit with donated state.
+"""Training step factory: microbatch gradient accumulation, mixed precision
+(``Policy.cast_compute`` at the top of every step), optional int8
+error-feedback gradient compression on the cross-pod axis, jit with donated
+state.
 
 The returned step is mesh-agnostic: under a mesh (``repro.distributed.ctx``)
-the in/out shardings come from the rule engine; on one device it's plain
-jit.  This is the same function the multi-pod dry-run lowers.
+the in/out shardings come from the rule engine via the shared
+``ExecutionContext`` (``TrainConfig.apply_context(mesh=...)`` →
+``ctx.train_state_shardings`` — the same substrate serving runs on,
+DESIGN.md §9); on one device it's plain jit.  This is the same function the
+multi-pod dry-run lowers.
 """
 from __future__ import annotations
 
@@ -15,10 +19,11 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.common.policy import BF16, Policy
 from repro.configs.base import ModelConfig
 from repro.distributed.ctx import shard
+from repro.distributed.execution import ExecutionContext
 from repro.models import lm
-from repro.models.mixer_api import ApplyContext
 from repro.train import optim as O
 
 
@@ -32,15 +37,23 @@ class TrainConfig:
     z_loss_weight: float = 1e-4
     unroll: bool = False  # python-loop layer stack (dry-run cost probes)
     remat_policy: str = "nothing"  # nothing | dots | dots_no_batch
+    # fp32 master params, policy-cast compute at the top of the jitted step
+    policy: Policy = BF16
+    fsdp: bool = True  # ZeRO-3 embed-family dims over data under a mesh
 
-    def apply_context(self) -> ApplyContext:
+    def apply_context(self, mesh=None) -> ExecutionContext:
         """The single resolution point for execution options: constructing
-        the context validates the conv backend / remat policy up front."""
-        return ApplyContext(
+        the context validates the conv backend / remat policy up front.
+        Pass the mesh to get rule-driven state/cache shardings from the
+        same object (``ctx.train_state_shardings`` et al.)."""
+        return ExecutionContext(
             conv_backend=self.conv_backend,
             remat=self.remat,
             remat_policy=self.remat_policy,
             unroll=self.unroll,
+            mesh=mesh,
+            policy=self.policy,
+            fsdp=self.fsdp,
         )
 
 
@@ -51,13 +64,18 @@ def init_train_state(key, cfg: ModelConfig):
     return {"params": params, "opt": O.init_adamw(params)}, axes
 
 
-def _loss(params, cfg: ModelConfig, tcfg: TrainConfig, ctx: ApplyContext, batch):
+def _loss(params, cfg: ModelConfig, tcfg: TrainConfig, ctx: ExecutionContext,
+          batch):
+    # mixed precision: fp32 master params enter the model policy-cast (one
+    # cast at the step top; grads flow back to fp32 through the astype vjp)
+    params = ctx.cast_compute(params)
     return lm.loss_fn(
         params, cfg, batch["tokens"], batch["labels"],
         batch.get("frontend_embeds"),
         ctx=ctx,
         moe_aux_weight=tcfg.moe_aux_weight,
         z_loss_weight=tcfg.z_loss_weight,
+        compute_dtype=ctx.compute_dtype or jnp.bfloat16,
     )
 
 

@@ -104,6 +104,68 @@ def test_conv_backends_gated_parity_fast(L):
     _run_all_backends(2, L, 4, seed=1000 + L, with_skip=True, with_gate=True)
 
 
+def test_fft_sp_registered_with_contract():
+    """The sequence-parallel conv is a first-class registry citizen: mesh
+    aware, unfused-gate fallback (ConvBackend.__call__ applies the two-pass
+    schedule), and — with no ambient mesh — included in every sweep above
+    via its local-FFT fallback."""
+    from repro.core.conv_api import get_conv_backend
+
+    b = get_conv_backend("fft_sp")
+    assert b.mesh_aware and not b.supports_gate and not b.oracle
+
+
+def test_fft_sp_sharded_gated_parity_subprocess():
+    """fft_sp on a REAL 8-way model mesh (subprocess, forced host devices):
+    the sharded two-stage Cooley-Tukey path — not the fallback — must match
+    the fft backend, gated and ungated, including an odd batch and a skip.
+    This is the mesh half of the registry parity sweep (the in-process
+    sweep only ever sees the meshless fallback)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.conv_api import get_conv_backend
+        from repro.distributed import ctx
+
+        mesh = jax.make_mesh((8,), ("model",))
+        fft_sp = get_conv_backend("fft_sp")
+        fft = get_conv_backend("fft_local")
+        B, L, D = 3, 64, 4
+        rng = np.random.default_rng(0)
+        u = jnp.asarray(rng.standard_normal((B, L, D)), jnp.float32)
+        h = jnp.asarray(rng.standard_normal((D, L)) / L, jnp.float32)
+        skip = jnp.asarray(rng.standard_normal((D,)), jnp.float32)
+        gate = jnp.asarray(rng.standard_normal((B, L, D)), jnp.float32)
+        with ctx.use_mesh(mesh):
+            got = np.asarray(fft_sp(u, h, skip, gate))
+            got_plain = np.asarray(fft_sp(u, h, skip))
+        want = np.asarray(fft(u, h, skip, gate))
+        want_plain = np.asarray(fft(u, h, skip))
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(got_plain, want_plain,
+                                   rtol=2e-3, atol=2e-3)
+        # L % 8 != 0 must fall back, not crash
+        u2, h2 = u[:, :61], h[:, :61] * 0.0 + h[:, :61]
+        with ctx.use_mesh(mesh):
+            np.asarray(fft_sp(u2, h2, skip))
+        print("OK")
+    """)
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env=env, timeout=900,
+    )
+    assert proc.returncode == 0, f"stderr:\n{proc.stderr[-4000:]}"
+    assert "OK" in proc.stdout
+
+
 @pytest.mark.parametrize(
     "B,L,D,C,bd",
     [(2, 100, 33, 32, 32), (1, 96, 8, 32, 8), (2, 65, 5, 16, 4)],

@@ -177,6 +177,60 @@ def test_cache_slot_ops_conformance(mixer):
     )
 
 
+@pytest.mark.parametrize("mixer", BUILTIN_MIXERS)
+def test_cache_shard_axes_conformance(mixer):
+    """The rule-driven cache-sharding spec (DESIGN.md §9): every named key
+    exists in the serving cache with a rank-matching tuple of known logical
+    names, and the rule engine resolves the spec on a production-shaped
+    mesh without touching the slot dim or cursors."""
+    from repro.distributed.sharding import TP_RULES, resolve_spec
+    from jax.sharding import PartitionSpec as P
+
+    cfg = small_cfg(mixer)
+    m = get_mixer(mixer)
+    mc = m.make_config(cfg)
+    spec = m.cache_shard_axes(mc)
+    cache = jax.eval_shape(lambda: m.init_cache(mc, 2, 16, jnp.bfloat16))
+    params, _ = split_params(m.init(jax.random.PRNGKey(0), mc))
+    full = jax.eval_shape(
+        lambda: m.prefill(params, mc, jnp.zeros((2, 8, cfg.d_model)), 16,
+                          jnp.bfloat16, ApplyContext())[1]
+    )
+    assert set(spec) <= set(full), (mixer, set(spec) - set(full))
+    known = set(TP_RULES) | {None}
+
+    class FakeMesh:  # debug-mesh shape: reduced configs have few heads
+        shape = {"data": 2, "model": 2}
+
+    # per-slot cursors carry no spec at all: they must replicate (every
+    # chip owns every slot's RoPE position / validity mask)
+    assert "t" not in spec, (mixer, spec)
+    slot_axes = m.cache_slot_axes(mc)
+    for k, ax in spec.items():
+        leaf = full[k]
+        assert len(ax) == leaf.ndim, (mixer, k, ax, leaf.shape)
+        assert set(ax) <= known, (mixer, k, set(ax) - known)
+        p = resolve_spec(ax, leaf.shape, FakeMesh())
+        # the slot dim may shard over the data axes (data-parallel
+        # request ownership) but never over 'model' — the tensor-parallel
+        # axis belongs to heads/channels
+        slot_dim = slot_axes.get(k, 0)
+        if slot_dim >= 0 and len(p) > slot_dim:
+            entry = p[slot_dim]
+            names = entry if isinstance(entry, tuple) else (
+                (entry,) if entry else ())
+            assert "model" not in names, (mixer, k, p)
+    # every decode-capable builtin shards at least one cache leaf over the
+    # model axis — serving caches scale with TP, not per-chip replication
+    resolved = [
+        resolve_spec(ax, full[k].shape, FakeMesh()) for k, ax in spec.items()
+    ]
+    assert any("model" in jax.tree_util.tree_leaves(list(p)) or
+               any(e == "model" for e in p) for p in resolved), (
+        mixer, resolved
+    )
+
+
 def _tree_bytes(tree) -> int:
     return sum(
         int(np.prod(leaf.shape)) * leaf.dtype.itemsize

@@ -77,18 +77,20 @@ def test_hyena_learns_recall_better_than_chance():
     t_tokens, t_labels = synthetic.associative_recall(rng, n=128, seq_len=32,
                                                       vocab=vocab)
     tcfg = TrainConfig(
-        optimizer=O.AdamWConfig(lr=2e-3, warmup_steps=10, total_steps=120,
+        optimizer=O.AdamWConfig(lr=2e-3, warmup_steps=10, total_steps=150,
                                 weight_decay=0.0),
         remat=False,
     )
     state, _ = init_train_state(jax.random.PRNGKey(0), cfg)
     step = jax.jit(make_train_step(cfg, tcfg))
     batch = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
-    for _ in range(120):
+    for _ in range(150):
         state, _ = step(state, batch)
     logits, _ = lm.forward(state["params"], cfg, jnp.asarray(t_tokens))
     acc = synthetic.eval_accuracy(np.asarray(logits, np.float32), t_labels)
     chance = 2.0 / vocab  # value space is vocab/2 symbols
-    # container-scale budget (120 steps) reaches ~1.8x chance on held-out
-    # dictionaries; full separation needs the paper's 200-epoch budget.
+    # container-scale budget (150 steps, ~2x chance on held-out
+    # dictionaries under the trainer's default bf16 compute policy; 120
+    # steps sat exactly on the bar); full separation needs the paper's
+    # 200-epoch budget.
     assert acc > 1.5 * chance, f"recall acc {acc:.2f} vs chance {chance:.2f}"
