@@ -1,14 +1,15 @@
 """Paper §4.1 driver: train a 2-layer Hyena on associative recall and report
 accuracy across vocabulary sizes (Fig. 4.1 / Table C.1 protocol, scaled to
-this container).  Demonstrates checkpoint/resume fault tolerance: kill and
-re-run with the same --ckpt to continue.
+this container).  Training runs on the shared resumable loop
+(``repro.train.loop.TrainLoop`` — DESIGN.md §10): kill and re-run with the
+same --ckpt to continue bit-exactly; pass --compress to train through the
+int8 error-feedback gradient channel the multi-pod runs use.
 
     PYTHONPATH=src python examples/train_associative_recall.py \
         --vocab 20 --seq 64 --steps 80 --ckpt /tmp/recall_ckpt
 """
 import argparse
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
@@ -17,10 +18,9 @@ import numpy as np
 from repro.configs import get_config
 from repro.data import synthetic
 from repro.models import lm
-from repro.train import checkpoint as ckpt
-from repro.train import ft
 from repro.train import optim as O
-from repro.train.trainer import TrainConfig, init_train_state, make_train_step
+from repro.train.loop import LoopConfig, TrainLoop
+from repro.train.trainer import TrainConfig
 
 
 def main():
@@ -30,6 +30,8 @@ def main():
     ap.add_argument("--steps", type=int, default=80)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--compress", action="store_true",
+                    help="int8 error-feedback gradient compression")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(
@@ -47,34 +49,23 @@ def main():
         optimizer=O.AdamWConfig(lr=2e-3, warmup_steps=10,
                                 total_steps=args.steps, weight_decay=0.0),
         remat=False,
+        grad_compression="int8_ef" if args.compress else None,
     )
-    state, _ = init_train_state(jax.random.PRNGKey(0), cfg)
-    start = 0
-    if args.ckpt and ckpt.latest_step(args.ckpt) is not None:
-        state, meta, start = ckpt.restore(args.ckpt, state)
-        print(f"resumed from step {start}")
-    step_fn = jax.jit(make_train_step(cfg, tcfg))
-    monitor = ft.StragglerMonitor()
-    handler = ft.PreemptionHandler()
+    lcfg = LoopConfig(
+        total_steps=args.steps, ckpt_dir=args.ckpt,
+        ckpt_every=args.ckpt_every, heartbeat_interval=None,
+    )
     batch = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
-    for i in range(start, args.steps):
-        t0 = time.time()
-        state, metrics = step_fn(state, batch)
-        monitor.record(i, time.time() - t0)
-        if args.ckpt and (i + 1) % args.ckpt_every == 0:
-            ckpt.save(args.ckpt, i + 1, state)
-        if handler.preempted():
-            if args.ckpt:
-                ckpt.save(args.ckpt, i + 1, state)
-            print("preempted — checkpointed, exiting")
-            return
-        if i % 20 == 0:
-            print(f"step {i:3d} loss {float(metrics['loss']):.3f}")
-    logits, _ = lm.forward(state["params"], cfg, jnp.asarray(test_tokens))
+    loop = TrainLoop(cfg, tcfg, lcfg)
+    result = loop.run(lambda step, key: batch, key=jax.random.PRNGKey(0))
+    if result.status == "preempted":
+        print("preempted — checkpointed, exiting")
+        return
+    logits, _ = lm.forward(result.state["params"], cfg, jnp.asarray(test_tokens))
     acc = synthetic.eval_accuracy(np.asarray(logits, np.float32), test_labels)
     print(f"vocab={args.vocab} seq={args.seq} test recall accuracy: {acc:.2%}")
-    if monitor.stragglers:
-        print("straggler report:", monitor.last_report)
+    if result.stragglers:
+        print("straggler report:", loop.monitor.last_report)
     print("OK")
 
 

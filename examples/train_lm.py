@@ -1,30 +1,29 @@
 """End-to-end LM training driver (the paper's §4.2 pipeline): any registered
 arch (default: the paper's hyena-153m), byte-level corpus, resumable
-sharded data loader, async checkpointing, preemption handling, straggler
-monitoring.  This is the single-host entry point; on a real pod the same
-step function is lowered by launch/dryrun.py onto the production mesh.
+sharded data loader — all lifecycle (async checkpointing, preemption
+draining, straggler/heartbeat telemetry, resume-from-latest-committed) owned
+by the shared ``repro.train.loop.TrainLoop`` (DESIGN.md §10).  This is the
+single-host entry point; on a real pod the same step function is lowered by
+launch/dryrun.py onto the production mesh.
 
 Full-size run (needs a TPU pod):
     python examples/train_lm.py --arch hyena-153m --seq 2048 --batch 256
 Container-scale smoke (default): a reduced config, a few hundred steps on
-the in-repo corpus.
+the in-repo corpus.  Kill and re-run with the same --ckpt to resume
+bit-exactly.
 """
 import argparse
 import dataclasses
 import os
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.data import lm_data, tokenizer
-from repro.models import lm
-from repro.train import checkpoint as ckpt
-from repro.train import ft
 from repro.train import optim as O
-from repro.train.trainer import TrainConfig, init_train_state, make_train_step
+from repro.train.loop import LoopConfig, TrainLoop
+from repro.train.trainer import TrainConfig
 
 
 def build_corpus() -> np.ndarray:
@@ -51,6 +50,10 @@ def main():
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt", default="/tmp/repro_lm_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-compression", default=None,
+                    choices=["int8_ef"],
+                    help="int8 error-feedback compression of the gradient "
+                         "all-reduce (cross-pod bandwidth)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -67,7 +70,6 @@ def main():
     stream = lm_data.TokenStream(
         corpus, global_batch=args.batch, seq_len=args.seq, seed=0
     )
-    prefetch = lm_data.Prefetcher(stream, depth=2)
     tcfg = TrainConfig(
         optimizer=O.AdamWConfig(
             lr=args.lr, warmup_steps=min(50, args.steps // 10),
@@ -75,48 +77,20 @@ def main():
         ),
         microbatches=args.microbatches,
         remat=True,
+        grad_compression=args.grad_compression,
     )
-    state, _ = init_train_state(jax.random.PRNGKey(0), cfg)
-    start = 0
-    if ckpt.latest_step(args.ckpt) is not None:
-        state, meta, start = ckpt.restore(args.ckpt, state)
-        stream.restore(meta["loader"])
-        print(f"resumed from step {start}")
-    writer = ckpt.AsyncCheckpointer(args.ckpt, keep_last=2)
-    handler = ft.PreemptionHandler()
-    monitor = ft.StragglerMonitor()
-    heartbeat = ft.Heartbeat(os.path.join(args.ckpt, "heartbeat"), 30.0)
-    os.makedirs(args.ckpt, exist_ok=True)
-    heartbeat.start()
-    step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
-
-    tokens_seen = 0
-    for i in range(start, args.steps):
-        t0 = time.time()
-        batch = {k: jnp.asarray(v) for k, v in prefetch.next().items()}
-        state, metrics = step_fn(state, batch)
-        dt = time.time() - t0
-        slow = monitor.record(i, dt)
-        tokens_seen += args.batch * args.seq
-        if (i + 1) % args.ckpt_every == 0:
-            writer.save(i + 1, state, meta={"loader": prefetch.consumed_state})
-        if handler.preempted():
-            writer.save(i + 1, state, meta={"loader": prefetch.consumed_state})
-            writer.close()
-            print("preempted — checkpointed, exiting cleanly")
-            return
-        if i % 20 == 0 or i == args.steps - 1:
-            print(
-                f"step {i:4d} loss {float(metrics['loss']):.3f} "
-                f"gnorm {float(metrics['grad_norm']):.2f} "
-                f"{args.batch * args.seq / dt:.0f} tok/s"
-                + (" [straggler]" if slow else "")
-            )
-    writer.save(args.steps, state, meta={"loader": prefetch.consumed_state})
-    writer.close()
-    heartbeat.stop()
-    prefetch.close()
-    print(f"done: {tokens_seen / 1e6:.1f}M tokens, stragglers={monitor.stragglers}")
+    lcfg = LoopConfig(
+        total_steps=args.steps, ckpt_dir=args.ckpt,
+        ckpt_every=args.ckpt_every, keep_last=2,
+    )
+    loop = TrainLoop(cfg, tcfg, lcfg)
+    result = loop.run(stream, key=jax.random.PRNGKey(0))
+    if result.status == "preempted":
+        print("preempted — checkpointed, exiting cleanly")
+        return
+    tokens_seen = result.step * args.batch * args.seq
+    print(f"done: {tokens_seen / 1e6:.1f}M tokens, "
+          f"stragglers={result.stragglers}")
     print("OK")
 
 

@@ -6,9 +6,19 @@ quantized to int8 with a per-tensor scale before the pod-axis all-reduce
 quantization residual is fed back into the next step's gradient (error
 feedback — keeps SGD/Adam convergence; Karimireddy et al. 2019).
 
-``compressed_psum`` runs inside shard_map/pjit; ``apply`` is the stateful
-wrapper the trainer uses (residual state is part of the train state, so it
-checkpoints/reshards like everything else).
+``compressed_psum`` runs inside shard_map (true int8 wire traffic);
+``apply`` is the stateful wrapper the trainer's jitted step uses when
+``TrainConfig.grad_compression="int8_ef"`` (residual state lives in the
+train state under ``"cgrad"``, so it checkpoints/reshards like everything
+else — DESIGN.md §10).  The two forms share the scale (per-tensor global
+amax, pmax-agreed in ``compressed_psum``) but not the rounding point: the
+jit-SPMD step rounds the globally-reduced gradient once (≤ scale/2 error
+per element), while the wire collective rounds each of P shards' partials
+before summing (≤ P·scale/2 worst case).  The jit form is therefore the
+*tighter* end of the channel — error feedback carries either residual into
+the next step, but convergence results obtained with it bound the wire
+form only up to that factor.  The byte saving on the DCN links needs the
+shard_map form, which the pod-axis test lowers.
 """
 from __future__ import annotations
 
@@ -68,3 +78,8 @@ def compress_decompress_with_feedback(
     new_r = treedef.unflatten([o[1] for o in outs])
     err = jnp.stack([jnp.mean(jnp.abs(o[1])) for o in outs]).mean()
     return new_g, new_r, {"compression_abs_err": err}
+
+
+# The name the trainer (and its docstring) use: error-feedback int8
+# compression of the gradient tree inside the jitted train step.
+apply = compress_decompress_with_feedback

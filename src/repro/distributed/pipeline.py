@@ -63,7 +63,11 @@ def pipeline_forward(
         _, outs = jax.lax.scan(tick, buf0, jnp.arange(n_ticks))
         # finished microbatch m arrives at tick m + S - 1
         result = outs[S - 1 :]
-        return result
+        # only stage 0 collected real values (zeros elsewhere); psum over
+        # the pipe axis broadcasts them so the result — declared replicated
+        # by out_specs=P() — is actually correct on every device, not just
+        # whichever shard the runtime assembles the global array from.
+        return jax.lax.psum(result, axis)
 
     from repro.distributed.ctx import shard_map
 
@@ -72,6 +76,6 @@ def pipeline_forward(
         mesh=mesh,
         in_specs=(P(axis), P()),  # params stage-sharded; x replicated
         out_specs=P(),
-        check=False,
+        check=False,  # axis_index-driven injects are device-varying by design
     )
     return fn(stage_params, x)

@@ -215,11 +215,14 @@ def train_state_shardings(
     fsdp: bool = False,
     data_axes: Tuple[str, ...] = ("data",),
 ) -> Any:
-    """Shardings for the canonical train state ``{"params", "opt"}``.
+    """Shardings for the canonical train state ``{"params", "opt"}`` plus
+    optional per-parameter companion trees (``"cgrad"`` — the int8
+    error-feedback compression residuals).
 
-    Adam moments mirror the parameter layout (they are elementwise functions
-    of the grads — co-locating them is what makes FSDP/ZeRO-3 fit); every
-    other opt leaf (step counters etc.) replicates.
+    Adam moments — and the compression residuals — mirror the parameter
+    layout (they are elementwise functions of the grads — co-locating them
+    is what makes FSDP/ZeRO-3 fit); every other opt leaf (step counters
+    etc.) replicates.
     """
     axes = {
         "params": param_axes,
@@ -228,6 +231,8 @@ def train_state_shardings(
             for k in state.get("opt", {})
         },
     }
+    if "cgrad" in state:
+        axes["cgrad"] = param_axes
     return tree_shardings(
         axes, state, mesh, fsdp=fsdp, data_axes=data_axes
     )

@@ -49,7 +49,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.models import lm
 from repro.models.mixer_api import resolve_remat_policy
 from repro.train import optim as O
-from repro.train.trainer import TrainConfig, make_train_step
+from repro.train.trainer import TrainConfig, abstract_train_state, make_train_step
 
 PAPER_ARCHS = ["hyena-153m", "hyena-1.3b"]  # the paper's own models, extra rows
 
@@ -163,14 +163,12 @@ def build_step(cfg, shape_name: str, mesh: Mesh, *, unroll=False, probe_groups=N
             optimizer=O.AdamWConfig(), remat=True, unroll=unroll,
             conv_backend=resolve_conv_backend(),
             remat_policy=resolve_remat_policy(),
+            grad_compression=os.environ.get("REPRO_GRAD_COMPRESSION") or None,
         )
         ectx = tcfg.apply_context(mesh=mesh)
-        params, axes = abstract_params(run_cfg)
-        opt_struct = {
-            "m": params, "v": params,
-            "step": jax.ShapeDtypeStruct((), jnp.int32),
-        }
-        state = {"params": params, "opt": opt_struct}
+        # the trainer's own state description (incl. compression residuals
+        # when enabled) — no hand-built {"m","v","step"} mirror here
+        state, axes = abstract_train_state(run_cfg, tcfg)
         state_shard = ectx.train_state_shardings(axes, state)
         specs = token_specs(run_cfg, shape)
         batch = {k: v for k, v in specs.items()}

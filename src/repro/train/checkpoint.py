@@ -129,7 +129,7 @@ def restore(
     paths_like = jax.tree_util.tree_flatten_with_path(like)
     leaves_like, treedef = paths_like
     flat_shardings = (
-        treedef_flatten(shardings, [p for p, _ in leaves_like])
+        _flatten_shardings(shardings, leaves_like)
         if shardings is not None
         else [None] * len(leaves_like)
     )
@@ -153,13 +153,45 @@ def restore(
     return tree, manifest["meta"], step
 
 
-def treedef_flatten(shardings, _paths):
-    return jax.tree_util.tree_leaves(
-        shardings, is_leaf=lambda x: x is None or hasattr(x, "spec")
-    )
+def _flatten_shardings(shardings, leaves_like):
+    """Flatten a shardings tree leaf-aligned with the restore target.
+
+    The structure must mirror the target exactly (a leaf per target leaf,
+    ``None`` = default placement).  A structure that merely *flattens* to
+    the same length would silently pair leaves with the wrong shardings —
+    an elastic re-mesh restart would place tensors by someone else's rule —
+    so any mismatch raises with the first offending key.
+    """
+    is_leaf = lambda x: x is None or hasattr(x, "spec")
+    flat_s, _ = jax.tree_util.tree_flatten_with_path(shardings, is_leaf=is_leaf)
+    keys_like = [_leaf_key(p) for p, _ in leaves_like]
+    keys_s = [_leaf_key(p) for p, _ in flat_s]
+    if keys_s != keys_like:
+        missing = [k for k in keys_like if k not in keys_s]
+        extra = [k for k in keys_s if k not in keys_like]
+        offender = (missing + extra or ["<leaf order>"])[0]
+        raise ValueError(
+            f"shardings tree does not match restore target at {offender!r} "
+            f"({len(flat_s)} sharding leaves vs {len(keys_like)} target "
+            f"leaves; missing={missing[:3]}, unexpected={extra[:3]})"
+        )
+    return [s for _, s in flat_s]
 
 
 def cleanup(directory: str, keep_last: int = 3) -> None:
+    """Delete all but the newest ``keep_last`` *committed* checkpoints.
+
+    Retention is explicit: ``keep_last`` must be >= 1 (there is no
+    "delete everything" spelling — a preempted run's only restart point is
+    the newest committed step).  Uncommitted ``step_*`` debris from crashed
+    writes is always removed; the in-flight ``tmp_step_*`` staging dirs are
+    never touched (the writer owns them).
+    """
+    if keep_last < 1:
+        raise ValueError(
+            f"cleanup(keep_last={keep_last}): retention must keep at least "
+            "the newest committed checkpoint"
+        )
     if not os.path.isdir(directory):
         return
     steps = sorted(
@@ -168,18 +200,29 @@ def cleanup(directory: str, keep_last: int = 3) -> None:
         for m in [re.fullmatch(r"step_(\d+)", name)]
         if m
     )
-    for s in steps[:-keep_last] if keep_last else steps:
-        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"), ignore_errors=True)
+    committed = [
+        s for s in steps
+        if os.path.exists(os.path.join(directory, f"step_{s:08d}", "_COMMITTED"))
+    ]
+    keep = set(committed[-keep_last:])
+    for s in steps:
+        if s not in keep:
+            shutil.rmtree(
+                os.path.join(directory, f"step_{s:08d}"), ignore_errors=True
+            )
 
 
 class AsyncCheckpointer:
     """Snapshot-on-call, write-on-thread. `wait()` drains pending writes."""
 
     def __init__(self, directory: str, keep_last: int = 3):
+        if keep_last < 1:
+            raise ValueError("AsyncCheckpointer: keep_last must be >= 1")
         self.directory = directory
         self.keep_last = keep_last
         self._q: "queue.Queue" = queue.Queue()
         self._err: Optional[BaseException] = None
+        self._err_lock = threading.Lock()
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
@@ -193,13 +236,24 @@ class AsyncCheckpointer:
                 save(self.directory, step, host_tree, meta)
                 cleanup(self.directory, self.keep_last)
             except BaseException as e:  # surfaced on next save()/wait()
-                self._err = e
+                with self._err_lock:
+                    self._err = e
             finally:
                 self._q.task_done()
 
+    def _take_err(self) -> Optional[BaseException]:
+        """Pop the latched background error (one raise per failure — a
+        failed write must not poison every later save forever).  Locked
+        against the worker's store so a failure landing mid-pop is never
+        silently overwritten with None."""
+        with self._err_lock:
+            err, self._err = self._err, None
+        return err
+
     def save(self, step: int, tree: Any, meta: Optional[Dict] = None):
-        if self._err:
-            raise self._err
+        err = self._take_err()
+        if err:
+            raise err
         host_tree = jax.tree_util.tree_map(
             lambda x: np.asarray(jax.device_get(x)), tree
         )
@@ -207,10 +261,16 @@ class AsyncCheckpointer:
 
     def wait(self):
         self._q.join()
-        if self._err:
-            raise self._err
+        err = self._take_err()
+        if err:
+            raise err
 
     def close(self):
-        self.wait()
-        self._q.put(None)
-        self._thread.join(timeout=10)
+        """Drain, then shut the worker down.  The sentinel is enqueued even
+        when a pending write failed (``wait`` re-raising must not leak the
+        worker thread)."""
+        try:
+            self.wait()
+        finally:
+            self._q.put(None)
+            self._thread.join(timeout=10)

@@ -71,7 +71,11 @@ class StragglerMonitor:
 
 def retry(fn: Callable, *, attempts: int = 3, base_delay: float = 0.1,
           exceptions=(IOError, OSError)):
-    """Call fn() with bounded exponential backoff."""
+    """Call fn() with bounded exponential backoff.  ``attempts`` must be
+    >= 1 — silently returning ``None`` without ever calling ``fn`` would
+    turn a mis-typed retry budget into a skipped checkpoint write."""
+    if attempts < 1:
+        raise ValueError(f"retry: attempts must be >= 1, got {attempts}")
     for i in range(attempts):
         try:
             return fn()
@@ -82,14 +86,19 @@ def retry(fn: Callable, *, attempts: int = 3, base_delay: float = 0.1,
 
 
 class Heartbeat:
+    """Periodic liveness file.  ``start``/``stop`` form a restartable pair:
+    each ``start`` spins up a fresh thread+event, and ``stop`` joins the
+    thread (the event wakes the ``wait`` immediately) so callers know no
+    further beat can race a directory teardown."""
+
     def __init__(self, path: str, interval: float = 30.0):
         self.path = path
         self.interval = interval
         self._stop = threading.Event()
-        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread: Optional[threading.Thread] = None
 
-    def _run(self):
-        while not self._stop.wait(self.interval):
+    def _run(self, stop: threading.Event):
+        while not stop.wait(self.interval):
             self.beat()
 
     def beat(self):
@@ -97,8 +106,17 @@ class Heartbeat:
             f.write(str(time.time()))
 
     def start(self):
+        if self._thread is not None and self._thread.is_alive():
+            raise RuntimeError("Heartbeat already running")
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._run, args=(self._stop,), daemon=True
+        )
         self.beat()
         self._thread.start()
 
     def stop(self):
         self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None

@@ -1,7 +1,9 @@
 """Training step factory: microbatch gradient accumulation, mixed precision
 (``Policy.cast_compute`` at the top of every step), optional int8
-error-feedback gradient compression on the cross-pod axis, jit with donated
-state.
+error-feedback gradient compression on the cross-pod axis
+(``TrainConfig.grad_compression="int8_ef"`` — residuals live in the train
+state under ``"cgrad"`` so they checkpoint and reshard like the Adam
+moments; DESIGN.md §10), jit with donated state.
 
 The returned step is mesh-agnostic: under a mesh (``repro.distributed.ctx``)
 the in/out shardings come from the rule engine via the shared
@@ -40,6 +42,16 @@ class TrainConfig:
     # fp32 master params, policy-cast compute at the top of the jitted step
     policy: Policy = BF16
     fsdp: bool = True  # ZeRO-3 embed-family dims over data under a mesh
+    # int8 error-feedback compression of the gradient all-reduce
+    # (None | "int8_ef"); residuals ride in the train state as "cgrad"
+    grad_compression: Optional[str] = None
+
+    def __post_init__(self):
+        if self.grad_compression not in (None, "int8_ef"):
+            raise ValueError(
+                f"grad_compression must be None or 'int8_ef', "
+                f"got {self.grad_compression!r}"
+            )
 
     def apply_context(self, mesh=None) -> ExecutionContext:
         """The single resolution point for execution options: constructing
@@ -57,11 +69,35 @@ class TrainConfig:
         )
 
 
-def init_train_state(key, cfg: ModelConfig):
+def init_train_state(key, cfg: ModelConfig, tcfg: Optional[TrainConfig] = None):
+    """Fresh train state: ``{"params", "opt"}`` plus — when ``tcfg`` enables
+    gradient compression — the ``"cgrad"`` error-feedback residual tree
+    (fp32 zeros mirroring the params, so it checkpoints/reshards with them).
+    """
     from repro.common.param import split_params
+    from repro.distributed import compression
 
     params, axes = split_params(lm.init_lm(key, cfg))
-    return {"params": params, "opt": O.init_adamw(params)}, axes
+    state = {"params": params, "opt": O.init_adamw(params)}
+    if tcfg is not None and tcfg.grad_compression:
+        state["cgrad"] = compression.init_residuals(params)
+    return state, axes
+
+
+def abstract_train_state(cfg: ModelConfig, tcfg: Optional[TrainConfig] = None):
+    """(ShapeDtypeStruct train-state tree, logical param-axes tree) without
+    allocating — the one description of the train-state shape shared by the
+    resumable loop's restore path and the dry-run's lowering (no caller
+    hand-builds ``{"m", "v", "step"}`` mirrors)."""
+    captured = {}
+
+    def build():
+        state, axes = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+        captured["axes"] = axes
+        return state
+
+    struct = jax.eval_shape(build)
+    return struct, captured["axes"]
 
 
 def _loss(params, cfg: ModelConfig, tcfg: TrainConfig, ctx: ExecutionContext,
@@ -88,6 +124,9 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
     grad_fn = jax.value_and_grad(
         lambda p, batch: _loss(p, cfg, tcfg, ctx, batch), has_aux=True
     )
+    compress = tcfg.grad_compression == "int8_ef"
+    if compress:
+        from repro.distributed import compression
 
     def step(state, batch):
         params = state["params"]
@@ -121,11 +160,21 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
             (grads, msum), _ = jax.lax.scan(acc_step, (g0, m0), micro)
             grads = jax.tree_util.tree_map(lambda g: g / n, grads)
             metrics = jax.tree_util.tree_map(lambda m: m / n, msum)
+        out = {}
+        if compress:
+            # int8 error-feedback on the reduced gradient, scaled by the
+            # per-tensor global amax (what compressed_psum pmax-agrees
+            # on).  One rounding of the reduced value — the tight end of
+            # the wire channel, which rounds per-shard partials (see
+            # distributed/compression.py).
+            grads, out["cgrad"], cm = compression.apply(grads, state["cgrad"])
+            metrics.update(cm)
         new_params, new_opt, om = O.adamw_update(
             tcfg.optimizer, grads, state["opt"], params
         )
         metrics.update(om)
-        return {"params": new_params, "opt": new_opt}, metrics
+        out.update({"params": new_params, "opt": new_opt})
+        return out, metrics
 
     return step
 

@@ -169,6 +169,15 @@ def test_pipeline_matches_sequential():
             ref = jnp.tanh(ref @ ws[s])
         np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                    rtol=1e-4, atol=1e-4)
+        # out_specs=P() declares the result replicated: that must be TRUE
+        # on every device, not just on stage 0 (zeros elsewhere used to be
+        # masked by check=False and whichever shard assembled the global
+        # array).  Check the per-device replicas.
+        shards = [np.asarray(s.data) for s in got.addressable_shards]
+        assert len(shards) == 4
+        for sh in shards:
+            np.testing.assert_allclose(sh, np.asarray(ref),
+                                       rtol=1e-4, atol=1e-4)
         print("OK")
     """)
     assert "OK" in out
@@ -194,6 +203,64 @@ def test_compressed_psum_accuracy():
         err = np.abs(np.asarray(got) - np.asarray(want)).max()
         amax = np.abs(np.asarray(x)).max()
         assert err <= 8 * (amax / 127.0) + 1e-6, err  # <= n_shards * 1 ulp
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_compressed_train_step_on_mesh():
+    """grad_compression='int8_ef' lowers and runs under SPMD: the sharded
+    compressed step tracks the single-device compressed step (residuals
+    and all), to all-reduce-order tolerance."""
+    out = run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np, dataclasses
+        from repro.configs import get_config
+        from repro.distributed import ctx
+        from repro.train import optim as O
+        from repro.train.trainer import TrainConfig, init_train_state, make_train_step
+
+        cfg = get_config("hyena-153m").reduced()
+        cfg = dataclasses.replace(cfg, vocab_size=64, n_layers=2)
+        tcfg = TrainConfig(optimizer=O.AdamWConfig(lr=1e-3, warmup_steps=0),
+                           remat=False, grad_compression="int8_ef")
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, 64)
+        labels = jax.random.randint(jax.random.PRNGKey(2), (8, 32), 0, 64)
+        batch = {"tokens": tokens, "labels": labels}
+
+        state, axes = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+        assert "cgrad" in state
+        s1, m1 = make_train_step(cfg, tcfg)(state, batch)
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        ectx = tcfg.apply_context(mesh=mesh)
+        state2, _ = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+        shardings = ectx.train_state_shardings(axes, state2)
+        # the rule engine places the residuals exactly like the params
+        for ps, cs in zip(jax.tree_util.tree_leaves(shardings["params"]),
+                          jax.tree_util.tree_leaves(shardings["cgrad"])):
+            assert ps.spec == cs.spec, (ps, cs)
+        state2 = jax.device_put(state2, shardings)
+        bshard = {k: jax.device_put(v, ectx.data_sharding(v.ndim, v.shape[0]))
+                  for k, v in batch.items()}
+        with ctx.use_mesh(mesh):
+            s2, m2 = jax.jit(make_train_step(cfg, tcfg))(state2, bshard)
+        assert abs(float(m1["loss"]) - float(m2["loss"])) < 2e-2
+        assert float(m2["compression_abs_err"]) > 0
+        lr = 1e-3
+        for a, b in zip(jax.tree_util.tree_leaves(s1["params"]),
+                        jax.tree_util.tree_leaves(s2["params"])):
+            a = np.asarray(a, np.float32)
+            b = np.asarray(jax.device_get(b), np.float32)
+            scale = max(np.abs(a).max(), 1e-3)
+            # same bound as the uncompressed cross-topology test: Adam step
+            # 1 is +-lr per element; quantization + reduce-order noise can
+            # flip signs near zero but never exceed the 2*lr envelope
+            assert np.abs(a - b).max() <= 2.2 * lr + 5e-2 * scale
+        # residuals are carried (nonzero) and bounded by one quantization
+        # bucket of their gradient leaf on both topologies
+        r2 = max(np.abs(np.asarray(jax.device_get(x), np.float32)).max()
+                 for x in jax.tree_util.tree_leaves(s2["cgrad"]))
+        assert 0 < r2 < 1.0, r2
         print("OK")
     """)
     assert "OK" in out

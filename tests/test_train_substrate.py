@@ -1,5 +1,6 @@
 """Optimizer / trainer / checkpoint / data-pipeline / FT tests."""
 import os
+import time
 
 import jax
 import jax.numpy as jnp
@@ -148,6 +149,90 @@ def test_checkpoint_integrity(tmp_path):
         ckpt.restore(d, tree)
 
 
+def test_cleanup_retention_explicit(tmp_path):
+    """keep_last=0 must refuse instead of deleting every checkpoint
+    (including the newest — the only restart point a preempted run has)."""
+    d = str(tmp_path / "ck")
+    tree = {"a": jnp.ones((2,))}
+    for s in [1, 2, 3]:
+        ckpt.save(d, s, tree)
+    with pytest.raises(ValueError, match="keep_last"):
+        ckpt.cleanup(d, keep_last=0)
+    assert ckpt.latest_step(d) == 3  # nothing was deleted
+    ckpt.cleanup(d, keep_last=1)
+    assert ckpt.latest_step(d) == 3
+    assert sorted(os.listdir(d)) == ["step_00000003"]
+
+
+def test_cleanup_ignores_uncommitted_for_retention(tmp_path):
+    """Crash debris (an uncommitted step dir) neither counts toward
+    retention nor survives it."""
+    d = str(tmp_path / "ck")
+    tree = {"a": jnp.ones((2,))}
+    ckpt.save(d, 1, tree)
+    ckpt.save(d, 2, tree)
+    os.makedirs(os.path.join(d, "step_00000003"))  # crashed, no _COMMITTED
+    ckpt.cleanup(d, keep_last=2)
+    assert sorted(os.listdir(d)) == ["step_00000001", "step_00000002"]
+
+
+def test_restore_sharding_structure_mismatch_raises(tmp_path):
+    """A shardings tree whose structure differs from the target must raise
+    with the offending key, not silently mis-pair leaves."""
+    d = str(tmp_path / "ck")
+    tree = {"a": jnp.ones((2,)), "b": {"c": jnp.ones((3,))}}
+    ckpt.save(d, 1, tree)
+    bad = {"a": None, "b": {"WRONG": None}}
+    with pytest.raises(ValueError, match="b~c|WRONG"):
+        ckpt.restore(d, tree, shardings=bad)
+    # too few leaves is just as wrong
+    with pytest.raises(ValueError, match="shardings"):
+        ckpt.restore(d, tree, shardings={"a": None})
+    # an exactly-mirroring tree (None = default placement) still works
+    restored, _, _ = ckpt.restore(d, tree, shardings={"a": None, "b": {"c": None}})
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.ones((2,)))
+
+
+def test_async_checkpointer_error_not_latched_forever(tmp_path, monkeypatch):
+    """One failed background write surfaces exactly once; later saves (and
+    close) proceed — and close never leaks the worker thread."""
+    d = str(tmp_path / "ck")
+    ac = ckpt.AsyncCheckpointer(d, keep_last=2)
+    tree = {"a": jnp.ones((2,))}
+    real_save = ckpt.save
+    boom = {"on": True}
+
+    def flaky_save(directory, step, t, meta=None):
+        if boom["on"]:
+            raise IOError("disk full")
+        return real_save(directory, step, t, meta)
+
+    monkeypatch.setattr(ckpt, "save", flaky_save)
+    ac.save(1, tree)
+    with pytest.raises(IOError, match="disk full"):
+        ac.wait()
+    boom["on"] = False
+    ac.save(2, tree)  # must NOT re-raise the stale error
+    ac.wait()
+    ac.close()
+    assert not ac._thread.is_alive()
+    assert ckpt.latest_step(d) == 2
+
+
+def test_async_checkpointer_close_joins_after_error(tmp_path, monkeypatch):
+    d = str(tmp_path / "ck")
+    ac = ckpt.AsyncCheckpointer(d, keep_last=2)
+    monkeypatch.setattr(
+        ckpt, "save", lambda *a, **k: (_ for _ in ()).throw(IOError("boom"))
+    )
+    ac.save(1, {"a": jnp.ones((2,))})
+    with pytest.raises(IOError):
+        ac.close()
+    # the shutdown sentinel still went through: no leaked worker
+    ac._thread.join(timeout=5)
+    assert not ac._thread.is_alive()
+
+
 def test_async_checkpointer(tmp_path):
     d = str(tmp_path / "ck")
     ac = ckpt.AsyncCheckpointer(d, keep_last=2)
@@ -291,3 +376,34 @@ def test_retry_recovers():
         return 42
 
     assert ft.retry(flaky, attempts=5, base_delay=0.001) == 42
+
+
+def test_retry_rejects_zero_attempts():
+    """attempts=0 used to return None without ever calling fn — a mis-typed
+    budget silently skipped the checkpoint write."""
+    calls = {"n": 0}
+
+    def fn():
+        calls["n"] += 1
+        return 1
+
+    with pytest.raises(ValueError, match="attempts"):
+        ft.retry(fn, attempts=0)
+    assert calls["n"] == 0
+
+
+def test_heartbeat_stop_joins_and_restarts(tmp_path):
+    """stop() joins the beat thread (no write can race a teardown), and a
+    stopped heartbeat can start again."""
+    path = str(tmp_path / "hb")
+    hb = ft.Heartbeat(path, interval=0.05)
+    hb.start()
+    with pytest.raises(RuntimeError):
+        hb.start()  # double-start is a bug, not a silent no-op
+    time.sleep(0.12)
+    hb.stop()
+    assert hb._thread is None  # joined
+    os.remove(path)
+    hb.start()  # restart: fresh thread + event
+    hb.stop()
+    assert os.path.exists(path)  # start() beats immediately
