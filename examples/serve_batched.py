@@ -14,7 +14,12 @@ devices to try it on CPU:
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
       PYTHONPATH=src python examples/serve_batched.py --mesh 2x4
 
-    PYTHONPATH=src python examples/serve_batched.py --arch hyena-153m
+``--paged`` swaps in the block-paged engine (DESIGN.md §11): the prompts
+below share a common prefix, so the radix prefix cache prefills it once
+and later requests fork it copy-on-write — watch the per-request
+``prefix_cached_tokens`` in the summary line.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch hyena-153m --paged
 """
 import argparse
 import dataclasses
@@ -39,6 +44,9 @@ def main():
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="serve on a (data, model) debug mesh, e.g. 2x4 "
                     "(needs that many devices)")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the paged engine: block-paged "
+                    "caches, radix prefix reuse, chunked prefill")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(
@@ -53,9 +61,9 @@ def main():
 
         ectx = ExecutionContext(mesh=parse_mesh_arg(args.mesh))
     prompts = [
-        "attention is all you need",
-        "the quick brown fox",
-        "hyena operators are",
+        "long convolutions are all you need",
+        "long convolutions are not enough",
+        "long convolutions beat attention",
         "subquadratic models",
     ]
     max_prompt = max(len(tokenizer.encode(p, add_bos=False)) for p in prompts)
@@ -63,7 +71,14 @@ def main():
         max_len=max_prompt + args.new_tokens + 1, n_slots=args.slots,
         temperature=args.temperature, top_k=8,
     )
-    eng = ServeEngine(params, cfg, scfg, seed=7, ectx=ectx, param_axes=axes)
+    if args.paged:
+        from repro.serve.paged import PagedConfig, PagedServeEngine
+
+        eng = PagedServeEngine(params, cfg, scfg, PagedConfig(page_size=4),
+                               seed=7, ectx=ectx, param_axes=axes)
+    else:
+        eng = ServeEngine(params, cfg, scfg, seed=7, ectx=ectx,
+                          param_axes=axes)
 
     streamed = {}
 
@@ -87,7 +102,11 @@ def main():
     for rid, p in rids.items():
         assert streamed[rid] == [int(t) for t in out[rid]]  # stream == drain
         toks += len(out[rid])
-        print(f"  {p!r} -> {tokenizer.decode(np.asarray(out[rid]))!r}")
+        cached = ""
+        if args.paged:
+            n = eng.request_metrics[rid]["prefix_cached_tokens"]
+            cached = f"  [prefix_cached_tokens={n}]"
+        print(f"  {p!r} -> {tokenizer.decode(np.asarray(out[rid]))!r}{cached}")
     print(f"{toks} tokens in {dt:.1f}s ({toks / dt:.1f} tok/s, "
           f"slots={args.slots}, requests={len(prompts)})")
     print("OK")

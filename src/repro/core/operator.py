@@ -126,11 +126,17 @@ def hyena_operator(
 
 
 def init_decode_cache(cfg: HyenaConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
-    """Rolling caches for single-token decode.
+    """Caches for single-token decode.
 
-    - ``short``: last (short_filter_len - 1) projected inputs, per channel.
-    - ``long``: last ``max_len`` values of the recurrence operand ``z^n`` for
-      every order (the conv input at order n), newest-first.
+    - ``short``: last (short_filter_len - 1) projected inputs, per channel,
+      newest-first (a tiny rolling window).
+    - ``long``: the recurrence operand ``z^n`` for every order (the conv
+      input at order n) stored at its **absolute position**: the value fed
+      at step ``p`` lives at index ``p`` and is never moved again.  One
+      dynamic write per token (no O(max_len) shift), so the history can
+      live in copy-on-write paged blocks (``repro.serve.paged``) without
+      dirtying every page on every step.  Positions ``>= t`` are unwritten
+      (zero or stale) and masked out of the decode contraction.
     """
     D, N = cfg.d_model, cfg.order
     inner = (N + 1) * D
@@ -185,12 +191,24 @@ def hyena_decode_step(
 ) -> Tuple[jax.Array, Dict[str, Any]]:
     """One token: u_t (B, D) -> y_t (B, D), updated cache.
 
-    Matches ``hyena_operator`` teacher-forced outputs (tested).  The long
-    convs of all N orders are evaluated against the cached operand
-    histories in ONE stacked ``(N, B, Lc, D) × (N, D, Lc)`` dot_general —
-    the history term of order n does not depend on the current token's
-    recurrence value, so only the cheap rank-1 correction
-    ``(h^n_0 + skip^n) · v`` stays inside the sequential order loop.
+    Matches ``hyena_operator`` teacher-forced outputs (tested).  The cache
+    holds each order's operand at its absolute position (append-only, see
+    :func:`init_decode_cache`), so with per-row cursor ``t``
+
+        y^n_t = (h^n_0 + skip^n)·v^n_t + Σ_{p<t} h^n_{t-p}·v^n_p
+
+    The lag taps ``h^n_{t-p}`` for ``p = 0..Lc-1`` are one contiguous slice
+    of the reversed tap grid starting at ``Th-1-t`` (per row, a
+    dynamic_slice); positions ``p >= t`` — unwritten or stale from a
+    recycled page — are masked to zero, so the history term tolerates
+    arbitrary garbage past the cursor.  All N orders then contract in one
+    stacked fp32 einsum; only the cheap rank-1 correction
+    ``(h^n_0 + skip^n)·v`` stays inside the sequential order loop.
+
+    The cache length ``Lc`` may be SHORTER than the tap grid ``Th`` (a
+    paged engine gathers a view just covering the live prefix); the only
+    requirement is ``t < min(Lc + 1, Th)`` — positions and taps past the
+    view are out of contract, exactly like decoding past ``max_len``.
 
     Filter taps should be precomputed (``precompute_decode_filters`` /
     mixer prefill).  A cache without taps falls back to a ONE-TIME
@@ -219,38 +237,39 @@ def hyena_decode_step(
     zc = zc.astype(u_t.dtype)
     parts = jnp.split(zc, N + 1, axis=-1)
     v, xs = parts[0], parts[1:]
-    # --- recurrence: one stacked history dot for all orders.  The rolling
-    # cache is newest-first and the incoming token shifts it by one, so
-    #   y^n = h^n_0·v^n + Σ_{l=1..Lc-1} h^n_l·cache^n_{l-1} + skip^n·v^n
-    # — the Σ term (the expensive O(N·B·Lc·D) part) only reads the cache,
-    # never the current v^n, and collapses into a single dot_general.
-    cache32 = cache["long"][:, :, : Lc - 1].astype(jnp.float32)  # (N,B,Lc-1,D)
-    taps32 = h[:, :, 1:Lc].astype(jnp.float32)  # (N, D, Lc-1)
-    hist = jax.lax.dot_general(
-        cache32.transpose(0, 1, 3, 2),  # (N, B, D, Lc-1)
-        taps32,  # (N, D, Lc-1)
-        ((((3,), (2,))), (((0, 2), (0, 1)))),  # contract lag; batch (N, D)
-        preferred_element_type=jnp.float32,
-    )  # (N, D, B)
-    hist = hist.transpose(0, 2, 1)  # (N, B, D)
+    # --- recurrence: one stacked history contraction for all orders over
+    # the absolute-position operand cache.  The Σ_{p<t} term (the expensive
+    # O(N·B·Lc·D) part) only reads the cache, never the current v^n, so all
+    # orders share one einsum; per-row lag taps are a dynamic_slice of the
+    # reversed grid, masked past the cursor.
+    t = cache["t"]  # (B,) per-row absolute position (== tokens absorbed)
+    Th = h.shape[2]
+    hist32 = cache["long"].astype(jnp.float32)  # (N, B, Lc, D)
+    h_rev = jnp.flip(h, axis=2).astype(jnp.float32)  # (N, D, Th)
+    h_ext = jnp.pad(h_rev, ((0, 0), (0, 0), (0, Lc)))
+
+    def row_taps(tb):
+        # taps[p] = h[t - p] for p < t, else 0: slice of the reversed grid
+        a = jax.lax.dynamic_slice(h_ext, (0, 0, Th - 1 - tb), (N, Dm, Lc))
+        return a * (jnp.arange(Lc) < tb)[None, None, :]
+
+    taps = jax.vmap(row_taps)(t)  # (B, N, D, Lc) fp32
+    hist = jnp.einsum("nbpd,bndp->nbd", hist32, taps)  # fp32 accumulate
     h0 = (h[:, :, 0] + skip).astype(jnp.float32)  # (N, D) fused rank-1 taps
-    new_long = []
     ldtype = cache["long"].dtype
+    vs = []
     for n in range(N):
-        new_long.append(
-            jnp.concatenate(
-                [v[:, None, :].astype(ldtype), cache["long"][n][:, : Lc - 1]],
-                axis=1,
-            )
-        )
+        vs.append(v.astype(ldtype))
         conv_y = hist[n] + v.astype(jnp.float32) * h0[n][None, :]
         v = xs[n] * conv_y.astype(u_t.dtype)
     y = v @ params["out_proj"]["w"].astype(u_t.dtype)
     if "b" in params["out_proj"]:
         y = y + params["out_proj"]["b"].astype(u_t.dtype)
+    rows = jnp.arange(B)
+    new_long = cache["long"].at[:, rows, t].set(jnp.stack(vs))
     out_cache = dict(cache)
     out_cache.update(
-        {"short": new_short, "long": jnp.stack(new_long), "t": cache["t"] + 1}
+        {"short": new_short, "long": new_long, "t": cache["t"] + 1}
     )
     return y, out_cache
 

@@ -289,6 +289,15 @@ class AttentionMixer(TokenMixer):
     def decode_step(self, params, mc, h_t, cache):
         return attention_decode_step(params, mc, h_t, cache)
 
+    def cache_page_axes(self, mc) -> dict:
+        # Global KV grows append-only with the sequence (token j at index
+        # j) — the classic vLLM paging target.  Sliding-window rings reuse
+        # index j % size, so their state is bounded by the window and
+        # stays pinned (LocalAttentionMixer inherits this and returns {}).
+        if mc.window is not None:
+            return {}
+        return {"k": 1, "v": 1}
+
     def cache_shard_axes(self, mc) -> dict:
         # KV ring buffers shard over the model axis on the head dim (the
         # decode einsums contract per KV head); when the head count can't

@@ -90,9 +90,10 @@ def hyena_prefill(
     *, conv_backend: Optional[str] = None,
 ) -> Tuple[jax.Array, dict]:
     """Full-sequence forward capturing the decode caches: the short-conv
-    input history and, per order, the conv *operand* history (newest-first),
-    which is exactly what ``hyena_decode_step``'s stacked history
-    dot_general contracts against at decode time.
+    input history (newest-first rolling window) and, per order, the conv
+    *operand* history at absolute positions (token ``p`` at index ``p``,
+    append-only) — exactly what ``hyena_decode_step``'s stacked history
+    einsum contracts against at decode time.
 
     The prompt's long convs run on the ``conv_backend`` registration
     (default ``fft``); decode steps themselves are cached dots and have no
@@ -113,14 +114,21 @@ def hyena_prefill(
     skip = F.filter_skip(params["filters"], cfg.filter)
     cache = init_decode_cache(cfg, B, max_len, dtype)
 
-    def hist(seq):  # (B, L, D) -> newest-first (B, max_len, D)
+    def hist(seq):  # (B, L, D) -> absolute positions, zero past L
+        # (prompts longer than max_len keep their last max_len values,
+        # re-based to position 0 — decoding past max_len is out of
+        # contract either way)
         n = min(L, max_len)
+        recent = seq[:, L - n :].astype(dtype)
+        return jnp.pad(recent, ((0, 0), (0, max_len - n), (0, 0)))
+
+    def newest_first(seq, k):  # (B, L, D) -> (B, k, D) rolling window
+        n = min(L, k)
         recent = jnp.flip(seq[:, L - n :], axis=1).astype(dtype)
-        pad = max_len - n
-        return jnp.pad(recent, ((0, 0), (0, pad), (0, 0)))
+        return jnp.pad(recent, ((0, 0), (0, k - n), (0, 0)))
 
     Ks = cfg.short_filter_len - 1
-    short_hist = hist(z_pre)[:, :Ks]
+    short_hist = newest_first(z_pre, Ks)
     longs = []
     for n in range(N):
         longs.append(hist(v))
@@ -196,6 +204,15 @@ class HyenaMixer(TokenMixer):
         # dim; the decode filter taps "h"/"skip" depend only on params and
         # the max_len grid, so the pool shares one copy across slots.
         return {"long": 1, "h": -1, "skip": -1}
+
+    def cache_page_axes(self, mc) -> dict:
+        # the per-order operand history is append-only at absolute
+        # positions (token p at index p; decode masks taps past the
+        # cursor), so it pages exactly like attention KV — the paper's
+        # O(L) operand state is the dominant per-request memory.  "short"
+        # is a (K-1)-wide rolling window and "t"/"h"/"skip" are O(1) or
+        # shared: pinned.
+        return {"long": 2}
 
     def cache_shard_axes(self, mc) -> dict:
         # depthwise conv: every cache leaf's channel dim shards over the

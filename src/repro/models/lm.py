@@ -321,6 +321,51 @@ def cache_slot_axes(cfg: ModelConfig, caches) -> Dict[str, Any]:
     return axes
 
 
+def cache_page_axes(cfg: ModelConfig, caches) -> Dict[str, Any]:
+    """Pytree of ints matching ``caches``: the append-only time axis per
+    leaf from each mixer's ``cache_page_axes`` spec, or -1 for pinned
+    leaves (bounded state the paged allocator keeps dense).  Scan-stacked
+    group caches shift the axis by one, like ``cache_slot_axes``.
+
+    Validates the paging contract here, once per tree: a paged leaf's time
+    axis must sit immediately after its slot axis (the block gather/scatter
+    moves slot->blocks and time->page as one adjacent pair)."""
+    from repro.models.mixer_api import get_mixer
+
+    def axes_for(mixer: str, cache, shift: int):
+        m = get_mixer(mixer)
+        mc = m.make_config(cfg)
+        spec = m.cache_page_axes(mc)
+        slots = m.cache_slot_axes(mc)
+        for k, ax in spec.items():
+            if k not in cache:
+                raise ValueError(
+                    f"mixer '{mixer}' cache_page_axes names '{k}' but the "
+                    f"cache has keys {sorted(cache)}"
+                )
+            if ax != slots.get(k, 0) + 1:
+                raise ValueError(
+                    f"mixer '{mixer}' leaf '{k}': paged time axis {ax} "
+                    f"must be slot axis {slots.get(k, 0)} + 1"
+                )
+        return {
+            k: (spec[k] + shift if k in spec else -1) for k in cache
+        }
+
+    axes: Dict[str, Any] = {
+        "groups": [
+            axes_for(mx, caches["groups"][p], 1)
+            for p, mx in enumerate(cfg.pattern)
+        ]
+    }
+    if "tail" in caches:
+        axes["tail"] = [
+            axes_for(mx, caches["tail"][i], 0)
+            for i, mx in enumerate(tail_mixers(cfg))
+        ]
+    return axes
+
+
 def cache_shard_axes(cfg: ModelConfig, caches) -> Dict[str, Any]:
     """Pytree of logical-axes tuples (or None = replicate) matching
     ``caches``, collected from each mixer's ``cache_shard_axes`` spec.

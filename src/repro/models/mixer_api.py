@@ -158,6 +158,27 @@ class TokenMixer:
         0; ``-1`` marks a leaf shared across slots (never sliced/reset)."""
         return {}
 
+    def cache_page_axes(self, mc) -> Dict[str, int]:
+        """Time (sequence-position) axis per cache key for leaves whose
+        per-slot state grows with the sequence **append-only**: position
+        ``p`` is written once, at index ``p``, and never moved.  These are
+        the leaves the paged allocator (``repro.serve.paged``) splits into
+        fixed-size blocks behind a copy-on-write block table; a radix
+        prefix cache can then share their pages across requests.
+
+        Keys not named here are *pinned*: bounded per-slot state (cursors,
+        conv windows, recurrent states, sliding-window KV rings — bounded
+        by the window, so paging them buys nothing) kept in a dense pool
+        and snapshotted wholesale by the prefix cache.
+
+        Contract (conformance-tested): every named key exists in the
+        cache, its time axis is exactly ``cache_slot_axes`` slot axis + 1
+        (block gather/scatter relies on the adjacency), its length is the
+        ``max_len`` grid, and the mixer's ``decode_step`` must tolerate
+        arbitrary garbage at positions ``>= t`` (recycled blocks are not
+        re-zeroed before reuse within a view)."""
+        return {}
+
     def cache_shard_axes(self, mc) -> Dict[str, Tuple[Optional[str], ...]]:
         """Logical axis names per cache key, for rule-driven decode-cache
         sharding (DESIGN.md §9): one tuple per key, parallel to the leaf's

@@ -100,6 +100,44 @@ class ServeConfig:
         )
 
 
+class DrainExhausted(RuntimeError):
+    """``drain(max_steps)`` ran out of budget with requests still active.
+
+    Carries everything the caller needs to recover or report instead of
+    losing the work: ``partial`` is the full rid -> tokens map (finished
+    plus in-flight prefixes, same shape as ``results()``) and ``active``
+    the rids that were still queued or resident when the budget ran out.
+    The engine is left consistent — stepping or draining again resumes
+    exactly where the budget cut off."""
+
+    def __init__(self, max_steps: int, partial, active):
+        super().__init__(
+            f"drain exceeded {max_steps} steps with {len(active)} "
+            f"request(s) still active: {list(active)}"
+        )
+        self.max_steps = max_steps
+        self.partial = partial
+        self.active = tuple(active)
+
+
+def resolve_serve_context(
+    scfg: ServeConfig, ectx: Optional[ExecutionContext]
+) -> ExecutionContext:
+    """Merge ServeConfig execution options into an externally built
+    context wherever the context doesn't set its own: every engine must
+    honor the same policy/backend as the meshless engine and the
+    ``generate()`` reference, or mesh-vs-meshless (and paged-vs-dense)
+    token identity breaks for any non-default ServeConfig."""
+    ctx = ectx if ectx is not None else scfg.apply_context()
+    if ctx.policy is None:
+        ctx = dataclasses.replace(
+            ctx, policy=scfg.policy or Policy(compute_dtype=scfg.cache_dtype)
+        )
+    if ctx.conv_backend is None and scfg.conv_backend is not None:
+        ctx = dataclasses.replace(ctx, conv_backend=scfg.conv_backend)
+    return ctx
+
+
 def serve_step(params, cfg: ModelConfig, token, caches, ctx=None):
     """(B,) int32 new token -> (logits (B, V), updated caches)."""
     return lm.decode_step(params, cfg, token, caches, ctx=ctx)
@@ -333,19 +371,7 @@ class ServeEngine(Backend):
             )
         self.cfg = cfg
         self.scfg = scfg
-        ctx = ectx if ectx is not None else scfg.apply_context()
-        # merge ServeConfig execution options into an externally built
-        # context wherever the context doesn't set its own: the mesh engine
-        # must honor the same policy/backend as the meshless engine and the
-        # generate() reference, or mesh-vs-meshless token identity breaks
-        # for any non-default ServeConfig
-        if ctx.policy is None:
-            ctx = dataclasses.replace(
-                ctx, policy=scfg.policy
-                or Policy(compute_dtype=scfg.cache_dtype)
-            )
-        if ctx.conv_backend is None and scfg.conv_backend is not None:
-            ctx = dataclasses.replace(ctx, conv_backend=scfg.conv_backend)
+        ctx = resolve_serve_context(scfg, ectx)
         self.ctx = ctx
         params = ctx.cast_compute(params)  # serving holds policy-cast weights
         if ctx.mesh is not None and param_axes is not None:
@@ -415,6 +441,7 @@ class ServeEngine(Backend):
 
     def _prune_finished(self) -> None:
         live = {r.rid for r in self.scheduler.queue}
+        live |= {r.rid for r in self.scheduler.readmit}
         live |= {r.rid for r in self.scheduler.slots.values()}
         for rid in [r for r in self._requests if r not in live]:
             req = self._requests.pop(rid)
@@ -436,13 +463,20 @@ class ServeEngine(Backend):
         return self.scheduler.evict(rid, self)
 
     def drain(self, max_steps: int = 100_000) -> Dict[int, np.ndarray]:
-        """Step until queue and pool are empty; returns rid -> tokens."""
+        """Step until queue and pool are empty; returns rid -> tokens.
+        Raises :class:`DrainExhausted` — carrying the partial rid -> tokens
+        map and the still-active rids — if the budget runs out first."""
         steps = 0
         while not self.scheduler.idle:
             self.step()
             steps += 1
             if steps > max_steps:
-                raise RuntimeError(f"drain exceeded {max_steps} steps")
+                active = sorted(
+                    {r.rid for r in self.scheduler.queue}
+                    | {r.rid for r in self.scheduler.readmit}
+                    | {r.rid for r in self.scheduler.slots.values()}
+                )
+                raise DrainExhausted(max_steps, self.results(), active)
         return self.results()
 
     def results(self) -> Dict[int, np.ndarray]:

@@ -1,0 +1,1070 @@
+"""Paged cache allocator + paged continuous-batching engine (DESIGN.md §11).
+
+vLLM pages attention KV.  This engine generalizes block paging to *every*
+registered TokenMixer's decode cache through one split, derived from the
+``cache_page_axes`` contract (models/mixer_api.py):
+
+  * **paged** leaves — unbounded append-only per-token state (attention
+    global K/V at time axis 1, hyena's per-order conv-operand history at
+    time axis 2).  Their slot axis is scattered over a pool of fixed-size
+    physical *blocks* (``page_size`` tokens each) addressed by one shared
+    per-slot block table; every paged leaf of every layer uses the same
+    table, so allocation is a per-request decision, not a per-tensor one.
+  * **pinned** leaves — bounded state (local-attention rings, short-conv
+    windows, SSD/RG-LRU recurrent states, cursors): a dense per-slot pool,
+    exactly like the dense engine.  For pure-recurrent patterns the paged
+    set is empty and the machinery degrades gracefully (the radix prefix
+    cache still works: its nodes snapshot pinned state).
+  * **shared** leaves (``cache_slot_axes`` = -1, e.g. hyena's filter taps)
+    — one copy, never written at decode time.
+
+Block 0 is reserved as the *trash block*: unmapped block-table entries
+point at it, so the gather/scatter of inactive or short rows needs no
+masking — garbage reads land past each mixer's validity cursor (the
+``cache_page_axes`` contract requires decode steps to mask positions
+>= t) and garbage writes land in block 0, which is never read.
+
+Copy-on-write: blocks are refcounted (:class:`BlockAllocator`).  Forked
+prefixes (radix hits) share blocks read-only; before a quantum may write
+into a page whose block is shared, the engine allocates a private block
+and copies it (``_copy_blocks``).  With page-aligned prefix forks shared
+blocks are never write targets, so the copy path is a safety net for
+future partial-page forks (beam search) — it is unit-tested directly.
+
+Prefill is *chunked and interleaved*: prompts are fed through the decode
+path ``decode_quantum`` tokens at a time (clipped to page boundaries so
+radix snapshots align), inside the same jitted pool scan that decodes
+everyone else.  Under overload a long prompt therefore cannot stall
+resident decodes for its full length — TTFT and inter-token latency are
+bounded by the quantum, which is the SLO knob (benchmarks/bench_serving
+measures both).  A welcome side effect: no per-prompt-length jit
+specialization (the dense engine compiles one prefill per distinct
+length); the paged engine compiles one program per (quantum, view-bucket)
+pair.
+
+Admission is priority/SLO-aware (:mod:`repro.serve.slo`) instead of FIFO,
+with starvation-free readmission (preempted requests re-enter ahead of
+new arrivals) and bounded priority preemption.  Token streams remain
+schedule-independent: sampling keys derive from (seed, rid, token index),
+identical to the dense engine's stream.
+
+Numerics: the dense engine prefills prompts through the batched
+``lm.prefill`` and is bit-identical to ``generate()``.  The paged engine
+absorbs prompts through the decode path, whose outputs match prefill to
+tolerance, not bit-exactly (different reduction shapes re-associate fp
+sums) — so greedy argmax can legitimately flip on near-ties.  The parity
+harness (tests/serve_parity.py) therefore allows a divergence only at a
+genuine reference near-tie (top-2 logit gap below tolerance) and pins
+fixed seeds that match exactly in float32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.execution import ExecutionContext
+from repro.models import lm
+from repro.models.mixer_api import get_mixer, slot_insert_leaf, slot_slice_leaf
+from repro.serve.engine import (
+    DrainExhausted,
+    ServeConfig,
+    _donate_pool_args,
+    _replicate_logits,
+    request_token_key,
+    resolve_serve_context,
+)
+from repro.serve.radix import RadixPrefixCache
+from repro.serve.sampling import sample_slots
+from repro.serve.scheduler import Event, Request, SamplingParams
+from repro.serve.slo import SLOQueue
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedConfig:
+    """Paged-allocator knobs, orthogonal to :class:`ServeConfig`."""
+
+    page_size: int = 8  # tokens per block
+    # physical blocks incl. the reserved trash block 0; 0 = auto-size so
+    # every slot can reach max_len (no paging pressure — tests/bench pass
+    # smaller pools to exercise preemption and measure slots-at-memory)
+    n_blocks: int = 0
+    prefix_cache: bool = True  # radix prefix reuse across requests
+    max_preemptions_per_step: int = 1  # priority preemptions per tick
+
+    def __post_init__(self):
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.n_blocks < 0:
+            raise ValueError(f"n_blocks must be >= 0, got {self.n_blocks}")
+
+
+class BlockAllocator:
+    """Refcounted free-list allocator over ``n_blocks`` physical blocks.
+    Block 0 is the reserved trash block and is never handed out."""
+
+    def __init__(self, n_blocks: int):
+        if n_blocks < 2:
+            raise ValueError("need at least 2 blocks (one usable + trash)")
+        self.n_blocks = n_blocks
+        # pop() order: lowest id first (deterministic schedules)
+        self._free: List[int] = list(range(n_blocks - 1, 0, -1))
+        self.ref = np.zeros((n_blocks,), np.int32)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> Optional[int]:
+        if not self._free:
+            return None
+        b = self._free.pop()
+        self.ref[b] = 1
+        return b
+
+    def incref(self, b: int) -> None:
+        assert 0 < b < self.n_blocks and self.ref[b] > 0
+        self.ref[b] += 1
+
+    def decref(self, b: int) -> bool:
+        """Returns True if the block's refcount hit zero (it is back on the
+        free list; the owner must zero its contents — invariant I3)."""
+        assert 0 < b < self.n_blocks and self.ref[b] > 0
+        self.ref[b] -= 1
+        if self.ref[b] == 0:
+            self._free.append(b)
+            return True
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolSpec:
+    """Static (hashable) description of the flattened cache pool: which
+    leaf is paged/pinned/shared and where its slot/time axes sit.  Passed
+    as a jit static argument so the gather/scatter specializes per model,
+    not per engine."""
+
+    treedef: Any
+    slot_axes: Tuple[int, ...]  # per flat leaf; -1 = shared
+    paged_idx: Tuple[int, ...]
+    pinned_idx: Tuple[int, ...]
+    shared_idx: Tuple[int, ...]
+    page: int
+
+
+def _axes_leaves(axes_tree) -> List[Any]:
+    """Flatten an axes tree whose leaves are ints / None / logical-axes
+    tuples, in the same order as the value tree's leaves."""
+    return jax.tree_util.tree_flatten(
+        axes_tree,
+        is_leaf=lambda a: a is None or isinstance(a, tuple)
+        or isinstance(a, int),
+    )[0]
+
+
+def build_pool_spec(cfg: ModelConfig, template, page: int) -> PoolSpec:
+    """Derive the paged/pinned/shared split from the mixer contracts for a
+    batch-1 cache ``template``."""
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    slot_axes = [int(a) for a in _axes_leaves(lm.cache_slot_axes(cfg, template))]
+    page_axes = [int(a) for a in _axes_leaves(lm.cache_page_axes(cfg, template))]
+    assert len(slot_axes) == len(leaves) == len(page_axes)
+    paged, pinned, shared = [], [], []
+    for i, (s, p) in enumerate(zip(slot_axes, page_axes)):
+        if s < 0:
+            shared.append(i)
+        elif p >= 0:
+            paged.append(i)
+        else:
+            pinned.append(i)
+    return PoolSpec(
+        treedef=treedef,
+        slot_axes=tuple(slot_axes),
+        paged_idx=tuple(paged),
+        pinned_idx=tuple(pinned),
+        shared_idx=tuple(shared),
+        page=int(page),
+    )
+
+
+# ------------------------------------------------------------ jitted ops
+#
+# All ops move flat *lists* of leaves (lists are pytrees): ``phys`` =
+# paged leaves with slot axis -> n_blocks and time axis -> page_size,
+# ``pinned`` = dense per-slot leaves, ``shared`` = single-copy leaves.
+# Module-level impls + one shared lru-cached jit per process, mirroring
+# repro.serve.engine's pool ops; mesh engines wrap them with sharding
+# constraints.
+
+
+def _assemble(spec: PoolSpec, phys, pinned, shared, table):
+    """Gather the per-slot *view* cache tree: each paged leaf's blocks are
+    gathered through ``table`` (S, Pv) and the (block, page) pair merges
+    back into one time axis of Pv * page tokens (a truncated but layout-
+    identical view of the dense cache, which every mixer's decode step
+    accepts because validity is cursor-masked)."""
+    leaves: List[Any] = [None] * len(spec.slot_axes)
+    for j, i in enumerate(spec.paged_idx):
+        s = spec.slot_axes[i]
+        v = jnp.take(phys[j], table, axis=s)  # (..., S, Pv, page, ...)
+        shp = v.shape
+        leaves[i] = v.reshape(shp[: s + 1] + (shp[s + 1] * shp[s + 2],) + shp[s + 3:])
+    for j, i in enumerate(spec.pinned_idx):
+        leaves[i] = pinned[j]
+    for j, i in enumerate(spec.shared_idx):
+        leaves[i] = shared[j]
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+def _split(spec: PoolSpec, caches, phys, table):
+    """Scatter a view cache tree back: paged leaves' pages return to their
+    physical blocks through the flat table, pinned leaves pass through.
+    Duplicate table entries are benign — shared blocks are read-only so
+    every writer scatters identical bytes, and unmapped entries collide on
+    the trash block 0, which is never read."""
+    flat = jax.tree_util.tree_flatten(caches)[0]
+    flat_table = table.reshape(-1)  # (S * Pv,)
+    new_phys = []
+    for j, i in enumerate(spec.paged_idx):
+        s = spec.slot_axes[i]
+        v = flat[i]  # (..., S, Pv * page, ...)
+        shp = v.shape
+        v = v.reshape(shp[:s] + (-1, spec.page) + shp[s + 2:])  # (.., S*Pv, page, ..)
+        ph = jnp.moveaxis(phys[j], s, 0)
+        val = jnp.moveaxis(v, s, 0)
+        new_phys.append(jnp.moveaxis(ph.at[flat_table].set(val), 0, s))
+    new_pinned = [flat[i] for i in spec.pinned_idx]
+    return new_phys, new_pinned
+
+
+def _paged_quantum_impl(
+    params, phys, pinned, shared, table, feed0, feed_next,
+    m, adv, t0, p0, active, temps, topks, rids, base_key,
+    *, cfg: ModelConfig, ctx, dtype, spec: PoolSpec, quantum: int,
+    sampled: bool, truncated: bool,
+):
+    """One fused quantum over the paged pool: gather block views, run
+    ``quantum`` slot-masked decode steps that both absorb prompt chunks
+    and decode (per-slot ``adv`` bounds progress; prompt tokens stream in
+    via the scan xs), sample with the (rid, token index) key streams, and
+    scatter the views back to physical blocks.
+
+    Per slot: ``t0`` tokens already absorbed, the next ``m`` scan steps
+    feed prompt tokens (``feed0`` now, ``feed_next[q]`` at step q+1),
+    after which the carry switches to the slot's own samples.  A token is
+    *emitted* when its sampling index ``count = t0 + q + 1 - p0`` is
+    >= 0; the host discards re-derived emissions (count below what the
+    request already holds) during eviction-continuation refeeds.
+
+    Returns (tokens (quantum, S), emit mask (quantum, S), new phys,
+    new pinned)."""
+    compute = getattr(ctx, "compute_dtype", None) or dtype
+    caches = _assemble(spec, phys, pinned, shared, table)
+
+    def body(carry, xs):
+        cur, caches = carry
+        q, nxt = xs
+        run = active & (q < adv)
+        logits, new_caches = lm.decode_step(
+            params, cfg, cur, caches, compute_dtype=compute, ctx=ctx,
+        )
+        logits = _replicate_logits(logits, ctx)
+        new_caches = lm.mask_slots(cfg, new_caches, caches, run)
+        count = t0 + q + 1 - p0
+        if sampled:
+            keys = jax.vmap(
+                lambda r, c: request_token_key(base_key, r, c)
+            )(rids, count)
+            samp = sample_slots(keys, logits, temps, topks,
+                                use_top_k=truncated)
+        else:
+            samp = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        emit = run & (count >= 0)
+        nxt_cur = jnp.where(q + 1 < m, nxt, samp)
+        nxt_cur = jnp.where(run, nxt_cur, cur)
+        return (nxt_cur, new_caches), (jnp.where(emit, samp, 0), emit)
+
+    (_, caches), (toks, emits) = jax.lax.scan(
+        body, (feed0, caches), (jnp.arange(quantum), feed_next)
+    )
+    new_phys, new_pinned = _split(spec, caches, phys, table)
+    return toks, emits, new_phys, new_pinned
+
+
+def _copy_blocks_impl(phys, src, dst, *, spec: PoolSpec):
+    """COW resolution: copy blocks ``src[k] -> dst[k]`` across every paged
+    leaf.  Padding pairs are (0, 0): a self-copy of the trash block."""
+    out = []
+    for j, i in enumerate(spec.paged_idx):
+        s = spec.slot_axes[i]
+        ph = jnp.moveaxis(phys[j], s, 0)
+        ph = ph.at[dst].set(ph[src])
+        out.append(jnp.moveaxis(ph, 0, s))
+    return out
+
+
+def _zero_blocks_impl(phys, blocks, *, spec: PoolSpec):
+    """Zero freed blocks (invariant I3 lifted to physical blocks); padding
+    entries are 0, harmlessly re-zeroing the trash block."""
+    out = []
+    for j, i in enumerate(spec.paged_idx):
+        s = spec.slot_axes[i]
+        ph = jnp.moveaxis(phys[j], s, 0)
+        ph = ph.at[blocks].set(jnp.zeros_like(ph[blocks]))
+        out.append(jnp.moveaxis(ph, 0, s))
+    return out
+
+
+def _pinned_snapshot_impl(pinned, slot, *, spec: PoolSpec):
+    """Batch-1 slices of every pinned leaf at ``slot`` — the radix node's
+    forkable state (rings, conv windows, recurrent states, cursors)."""
+    return [
+        slot_slice_leaf(leaf, slot, spec.slot_axes[i])
+        for leaf, i in zip(pinned, spec.pinned_idx)
+    ]
+
+
+def _pinned_restore_impl(pinned, slot, snap, *, spec: PoolSpec):
+    return [
+        slot_insert_leaf(leaf, one, slot, spec.slot_axes[i])
+        for leaf, one, i in zip(pinned, snap, spec.pinned_idx)
+    ]
+
+
+def _pinned_reset_impl(pinned, slot, *, spec: PoolSpec):
+    from repro.models.mixer_api import slot_zero_leaf
+
+    return [
+        slot_zero_leaf(leaf, slot, spec.slot_axes[i])
+        for leaf, i in zip(pinned, spec.pinned_idx)
+    ]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "ctx", "dtype", "max_len")
+)
+def _template_prefill(params, *, cfg: ModelConfig, ctx, dtype, max_len: int):
+    """Batch-1 single-token prefill whose cache is the pool *template*:
+    authoritative shapes/dtypes for every leaf plus real values for the
+    shared leaves (hyena's decode filter taps are params-dependent — a
+    zeros template would silently break every decode)."""
+    compute = getattr(ctx, "compute_dtype", None) or dtype
+    _, cache = lm.prefill(
+        params, cfg, jnp.zeros((1, 1), jnp.int32), max_len,
+        dtype=dtype, compute_dtype=compute, ctx=ctx,
+    )
+    return cache
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_paged_ops():
+    """Shared-per-process jitted workers (same pattern as the dense
+    engine's pool ops): specialize per static (cfg, ctx, spec, ...) — not
+    per engine — and donate the physical/pinned pools through updates."""
+    donate = _donate_pool_args()
+    quantum = jax.jit(
+        _paged_quantum_impl,
+        static_argnames=(
+            "cfg", "ctx", "dtype", "spec", "quantum", "sampled", "truncated",
+        ),
+        donate_argnums=(1, 2) if donate else (),
+    )
+    copyb = jax.jit(
+        _copy_blocks_impl, static_argnames=("spec",),
+        donate_argnums=(0,) if donate else (),
+    )
+    zerob = jax.jit(
+        _zero_blocks_impl, static_argnames=("spec",),
+        donate_argnums=(0,) if donate else (),
+    )
+    snap = jax.jit(_pinned_snapshot_impl, static_argnames=("spec",))
+    restore = jax.jit(
+        _pinned_restore_impl, static_argnames=("spec",),
+        donate_argnums=(0,) if donate else (),
+    )
+    preset = jax.jit(
+        _pinned_reset_impl, static_argnames=("spec",),
+        donate_argnums=(0,) if donate else (),
+    )
+    return quantum, copyb, zerob, snap, restore, preset
+
+
+def _pow2_bucket(n: int, cap: int) -> int:
+    """Smallest power-of-two >= n, capped at ``cap`` — bounds the set of
+    jit specializations (view widths, copy/zero batch sizes)."""
+    b = 1
+    while b < n and b < cap:
+        b <<= 1
+    return min(b, cap)
+
+
+# ---------------------------------------------------------------- engine
+
+
+class PagedServeEngine:
+    """Paged continuous-batching engine: ``submit() / step() / drain()``.
+
+    Same request semantics and (seed, rid, token index) sampling streams
+    as :class:`repro.serve.engine.ServeEngine`, plus:
+
+      * block-paged cache memory with copy-on-write sharing and a radix
+        prefix cache (requests sharing a system prompt prefill once);
+      * chunked prefill interleaved with decode inside one jitted quantum
+        (no per-prompt-length compile; TTFT bounded under overload);
+      * priority/deadline admission with starvation-free readmission and
+        bounded priority preemption (:mod:`repro.serve.slo`);
+      * graceful degradation under memory pressure: allocation falls back
+        to radix LRU eviction, then to preempting the weakest resident
+        (strict (priority, age) order, so the strongest request always
+        makes progress).
+
+    Mesh-native: pass ``ectx`` with a mesh (and ``param_axes``) and the
+    physical block pool lives sharded by the same rule engine as the dense
+    pool (block dim on the data axes, heads/channels on model).
+    """
+
+    def __init__(self, params, cfg: ModelConfig, scfg: ServeConfig,
+                 pcfg: Optional[PagedConfig] = None, *, seed: int = 0,
+                 ectx: Optional[ExecutionContext] = None, param_axes=None):
+        for m in cfg.pattern:
+            if not get_mixer(m).supports_decode:
+                raise ValueError(
+                    f"mixer '{m}' does not support decode; cannot serve "
+                    f"pattern {cfg.pattern}"
+                )
+        if cfg.frontend or cfg.frontend_len:
+            raise ValueError(
+                "PagedServeEngine does not support modality-frontend "
+                "configs; strip the frontend or use generate()"
+            )
+        self.cfg = cfg
+        self.scfg = scfg
+        self.pcfg = pcfg or PagedConfig()
+        ctx = resolve_serve_context(scfg, ectx)
+        self.ctx = ctx
+        params = ctx.cast_compute(params)
+        if ctx.mesh is not None and param_axes is not None:
+            params = ctx.place(params, ctx.param_shardings(param_axes, params))
+        self.params = params
+        self._base_key = jax.random.PRNGKey(seed)
+
+        S = scfg.n_slots
+        page = self.pcfg.page_size
+        self._pages_max = max(1, math.ceil(scfg.max_len / page))
+        n_blocks = self.pcfg.n_blocks or S * self._pages_max + 1
+        self.alloc = BlockAllocator(n_blocks)
+        self.radix = (
+            RadixPrefixCache(page, self.alloc) if self.pcfg.prefix_cache
+            else None
+        )
+
+        # template cache -> static pool spec + physical pools
+        with ctx.scope():
+            template = _template_prefill(
+                self.params, cfg=cfg, ctx=ctx, dtype=scfg.cache_dtype,
+                max_len=scfg.max_len,
+            )
+        self.spec = build_pool_spec(cfg, template, page)
+        t_leaves = jax.tree_util.tree_flatten(template)[0]
+
+        def paged_shape(leaf, s):
+            shp = list(leaf.shape)
+            shp[s] = n_blocks
+            shp[s + 1] = page
+            return tuple(shp)
+
+        self._phys = [
+            jnp.zeros(paged_shape(t_leaves[i], self.spec.slot_axes[i]),
+                      t_leaves[i].dtype)
+            for i in self.spec.paged_idx
+        ]
+        self._pinned = [
+            jnp.zeros(
+                tuple(S if d == self.spec.slot_axes[i] else n
+                      for d, n in enumerate(t_leaves[i].shape)),
+                t_leaves[i].dtype,
+            )
+            for i in self.spec.pinned_idx
+        ]
+        self._shared = [jnp.array(t_leaves[i]) for i in self.spec.shared_idx]
+        self._shardings = None
+        self._mesh_ops = None
+        if ctx.mesh is not None:
+            shard_axes = _axes_leaves(lm.cache_shard_axes(cfg, template))
+            from repro.distributed.sharding import tree_shardings
+
+            def place(leaves, idx):
+                ax = [shard_axes[i] for i in idx]
+                sh = tree_shardings(ax, leaves, ctx.mesh, fsdp=ctx.fsdp,
+                                    data_axes=ctx.data_axes)
+                return jax.device_put(leaves, sh), sh
+
+            self._phys, phys_sh = place(self._phys, self.spec.paged_idx)
+            self._pinned, pin_sh = place(self._pinned, self.spec.pinned_idx)
+            self._shared, shr_sh = place(self._shared, self.spec.shared_idx)
+            self._shardings = (phys_sh, pin_sh, shr_sh)
+
+        # host scheduling state
+        self._table = np.zeros((S, self._pages_max), np.int32)
+        self._t = np.zeros((S,), np.int64)  # tokens absorbed per slot
+        self._p0 = np.zeros((S,), np.int64)  # original prompt length
+        self._last = np.zeros((S,), np.int32)  # last sampled token
+        self._feed: Dict[int, np.ndarray] = {}  # slot -> admission feed
+        self.queue = SLOQueue()
+        self.residents: Dict[int, Request] = {}  # slot -> request
+        self._free_slots: List[int] = list(range(S))[::-1]
+        self._requests: Dict[int, Request] = {}
+        self._prio: Dict[int, int] = {}
+        self._deadline: Dict[int, Optional[int]] = {}
+        self._results: Dict[int, np.ndarray] = {}
+        self._next_rid = 0
+        self._tick = 0
+        self.request_metrics: Dict[int, Dict[str, Any]] = {}
+
+    # ------------------------------------------------------------- public
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self.residents
+
+    def submit(
+        self,
+        prompt,
+        *,
+        max_new_tokens: int,
+        temperature: Optional[float] = None,
+        top_k: Optional[int] = None,
+        stop_tokens: Sequence[int] = (),
+        stream: Optional[Callable[[int, int, bool], None]] = None,
+        priority: int = 0,
+        deadline: Optional[int] = None,
+    ) -> int:
+        """Enqueue a request; returns its rid.  ``priority`` (higher wins)
+        and ``deadline`` (scheduler tick) order admission — see
+        :mod:`repro.serve.slo`."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size < 1:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if prompt.size + max_new_tokens > self.scfg.max_len:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new_tokens "
+                f"({max_new_tokens}) exceeds max_len {self.scfg.max_len}"
+            )
+        need = math.ceil((prompt.size + max_new_tokens) / self.pcfg.page_size)
+        if need > self.alloc.n_blocks - 1:
+            raise ValueError(
+                f"request needs {need} blocks but the pool holds "
+                f"{self.alloc.n_blocks - 1}; raise PagedConfig.n_blocks"
+            )
+        sp = SamplingParams(
+            max_new_tokens=int(max_new_tokens),
+            temperature=self.scfg.temperature if temperature is None
+            else float(temperature),
+            top_k=self.scfg.top_k if top_k is None else int(top_k),
+            stop_tokens=tuple(int(t) for t in stop_tokens),
+        )
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=prompt, params=sp, stream=stream)
+        self._requests[rid] = req
+        self._prio[rid] = int(priority)
+        self._deadline[rid] = deadline
+        self.queue.push(rid, priority=priority, deadline=deadline)
+        self.request_metrics[rid] = {
+            "submit_tick": self._tick, "first_token_tick": None,
+            "done_tick": None, "prefix_cached_tokens": 0,
+        }
+        return rid
+
+    def step(self) -> List[Event]:
+        """One tick: SLO-ordered admissions (with bounded priority
+        preemption), then one fused paged quantum that advances chunked
+        prefills and decodes together."""
+        self._tick += 1
+        events: List[Event] = []
+        by_rid: Dict[int, Request] = {}
+        try:
+            self._admit(by_rid)
+            if self.residents:
+                self._quantum(events, by_rid)
+        finally:
+            self._dispatch_streams(events, by_rid)
+            self._prune_finished()
+        return events
+
+    def evict(self, rid: int) -> bool:
+        """Preempt a resident request (continuation semantics: it re-enters
+        the readmit queue ahead of new arrivals and resumes from
+        ``prompt + emitted``)."""
+        if self.cfg.moe:
+            raise ValueError(
+                "eviction-with-continuation is unsupported for MoE "
+                "configs: capacity-based token dropping breaks "
+                "prefill/decode parity on readmission"
+            )
+        for slot, req in self.residents.items():
+            if req.rid == rid:
+                self._evict_slot(slot)
+                return True
+        return False
+
+    def drain(self, max_steps: int = 100_000) -> Dict[int, np.ndarray]:
+        """Step until queue and pool are empty; returns rid -> tokens.
+        Raises :class:`DrainExhausted` (carrying partial results) if the
+        budget runs out with requests still active."""
+        steps = 0
+        while not self.idle:
+            self.step()
+            steps += 1
+            if steps > max_steps:
+                raise DrainExhausted(
+                    max_steps, self.results(),
+                    sorted(
+                        set(r.rid for r in self.residents.values())
+                        | set(self.queue.rids())
+                    ),
+                )
+        return self.results()
+
+    def results(self) -> Dict[int, np.ndarray]:
+        out = dict(self._results)
+        out.update({
+            rid: np.asarray(req.tokens, np.int32)
+            for rid, req in self._requests.items()
+        })
+        return out
+
+    def pop_result(self, rid: int) -> np.ndarray:
+        return self._results.pop(rid)
+
+    # ------------------------------------------------- prefix-cache hooks
+    def flush_prefix(self) -> None:
+        """Drop the whole radix tree (and zero any blocks it released)."""
+        if self.radix is not None:
+            self._zero_freed(self.radix.flush())
+
+    def evict_prefix_node(self, rng) -> None:
+        """Drop one random radix leaf — the parity harness's chaos hook."""
+        if self.radix is not None:
+            self._zero_freed(self.radix.evict_node(rng))
+
+    def state_bytes(self) -> int:
+        """Resident cache-pool footprint (blocks + pinned + shared)."""
+        return int(sum(
+            x.nbytes for x in self._phys + self._pinned + self._shared
+        ))
+
+    def check_clean(self) -> None:
+        """Assert the pool invariants of an idle engine after
+        ``flush_prefix()``: every block free with refcount 0, tables
+        cleared, and all physical state zeroed (block 0 — the trash block
+        — excepted, it absorbs padding writes by design)."""
+        assert self.idle, "check_clean() requires an idle engine"
+        assert self.alloc.n_free == self.alloc.n_blocks - 1, (
+            f"leaked blocks: {self.alloc.n_blocks - 1 - self.alloc.n_free}"
+        )
+        assert not self.alloc.ref.any(), "nonzero refcounts on idle engine"
+        assert not self._table.any(), "stale block-table entries"
+        for j, i in enumerate(self.spec.paged_idx):
+            s = self.spec.slot_axes[i]
+            ph = np.asarray(jnp.moveaxis(self._phys[j], s, 0)[1:])
+            assert not ph.any(), f"paged leaf {i} has non-zero freed blocks"
+        for leaf in self._pinned:
+            assert not np.asarray(leaf).any(), "pinned pool not zeroed"
+
+    # ---------------------------------------------------------- admission
+    def _strength(self, req: Request) -> Tuple[int, int]:
+        """Total preemption order: priority first, then age (older rid
+        wins).  Strict totality guarantees the strongest request always
+        makes progress — no preemption livelock."""
+        return (self._prio[req.rid], -req.rid)
+
+    def _admit(self, by_rid: Dict[int, Request]) -> None:
+        preempted = 0
+        while True:
+            cand = self.queue.peek()
+            if cand is None:
+                break
+            rid, is_readmit = cand
+            if not self._free_slots:
+                # bounded priority preemption: a strictly stronger arrival
+                # may displace the weakest resident (readmits never
+                # preempt — they already ran once this residency cycle)
+                if (is_readmit or not self.residents
+                        or preempted >= self.pcfg.max_preemptions_per_step):
+                    break
+                cand_req = self._requests[rid]
+                victim = min(self.residents,
+                             key=lambda s: self._strength(self.residents[s]))
+                if self._strength(self.residents[victim]) >= \
+                        self._strength(cand_req):
+                    break
+                # commit to the candidate BEFORE evicting: the victim
+                # lands in the readmit deque, and if we re-peeked it would
+                # immediately reclaim the freed slot — preempting forever
+                # while the stronger arrival starves
+                self.queue.pop()
+                self._evict_slot(victim)
+                preempted += 1
+                self._admit_into(self._free_slots.pop(), rid, by_rid)
+                continue
+            self.queue.pop()
+            self._admit_into(self._free_slots.pop(), rid, by_rid)
+
+    def _admit_into(self, slot: int, rid: int,
+                    by_rid: Dict[int, Request]) -> None:
+        req = self._requests[rid]
+        self.residents[slot] = req
+        req.slot = slot
+        by_rid[rid] = req
+        feed = req.resume_prompt
+        self._feed[slot] = feed
+        self._p0[slot] = len(req.prompt)
+        t0 = 0
+        if self.radix is not None and len(feed) > 1:
+            depth, blocks, snap = self.radix.match(feed)
+            if depth:
+                for b in blocks:
+                    self.alloc.incref(b)
+                self._table[slot, :len(blocks)] = blocks
+                _, _, _, _, restore, _ = self._ops()
+                with self.ctx.scope():
+                    self._pinned = restore(
+                        self._pinned, jnp.asarray(slot, jnp.int32),
+                        snap, spec=self.spec,
+                    )
+                t0 = depth
+                self.request_metrics[req.rid]["prefix_cached_tokens"] = \
+                    max(self.request_metrics[req.rid]
+                        ["prefix_cached_tokens"], depth)
+        self._t[slot] = t0
+
+    # ------------------------------------------------------ block capacity
+    def _zero_freed(self, blocks: List[int]) -> None:
+        if not blocks:
+            return
+        k = _pow2_bucket(len(blocks), max(self.alloc.n_blocks, 1))
+        ids = np.zeros((k,), np.int32)
+        ids[: len(blocks)] = blocks
+        _, _, zerob, _, _, _ = self._ops()
+        with self.ctx.scope():
+            self._phys = zerob(self._phys, jnp.asarray(ids), spec=self.spec)
+
+    def _alloc_block(self, slot: int) -> Optional[int]:
+        """Allocate one block for ``slot``, escalating under pressure:
+        free list -> radix LRU eviction -> preempt a strictly weaker
+        resident.  Returns None when ``slot`` itself is the weakest — it
+        then stalls this quantum (adv = 0) instead of thrashing."""
+        while True:
+            b = self.alloc.alloc()
+            if b is not None:
+                return b
+            if self.radix is not None and self.radix.n_nodes:
+                self._zero_freed(self.radix.evict_lru(1))
+                continue
+            me = self.residents.get(slot)
+            victims = [
+                s for s, r in self.residents.items()
+                if s != slot and (me is None
+                                  or self._strength(r) < self._strength(me))
+            ]
+            if not victims:
+                return None
+            v = min(victims, key=lambda s: self._strength(self.residents[s]))
+            self._evict_slot(v)
+
+    def _ensure_writable(self, slot: int, t: int, adv: int) -> bool:
+        """Make every page the next ``adv`` tokens touch privately
+        writable: allocate unmapped pages (they arrive zeroed — I3) and
+        copy-on-write any block shared with the radix tree or a fork."""
+        page = self.pcfg.page_size
+        first, last = t // page, (t + adv - 1) // page
+        copies: List[Tuple[int, int]] = []
+        for pg in range(first, last + 1):
+            bid = int(self._table[slot, pg])
+            if bid == 0:
+                nb = self._alloc_block(slot)
+                if nb is None:
+                    return False
+                self._table[slot, pg] = nb
+            elif self.alloc.ref[bid] > 1:
+                nb = self._alloc_block(slot)
+                if nb is None:
+                    return False
+                copies.append((bid, nb))
+                self.alloc.decref(bid)
+                self._table[slot, pg] = nb
+        if copies:
+            k = _pow2_bucket(len(copies), max(self.alloc.n_blocks, 1))
+            src = np.zeros((k,), np.int32)
+            dst = np.zeros((k,), np.int32)
+            src[: len(copies)] = [c[0] for c in copies]
+            dst[: len(copies)] = [c[1] for c in copies]
+            _, copyb, _, _, _, _ = self._ops()
+            with self.ctx.scope():
+                self._phys = copyb(
+                    self._phys, jnp.asarray(src), jnp.asarray(dst),
+                    spec=self.spec,
+                )
+        return True
+
+    # ------------------------------------------------------------ quantum
+    def _plan_adv(self, slot: int, req: Request) -> int:
+        """Tokens this slot may absorb this quantum: the decode quantum,
+        clipped to the next page boundary while feeding the prompt (so
+        radix snapshots land page-aligned) and to the request's horizon."""
+        t = int(self._t[slot])
+        feed = self._feed[slot]
+        q = self.scfg.decode_quantum
+        page = self.pcfg.page_size
+        a = q
+        if self.radix is not None and t < len(feed):
+            pb = (t // page + 1) * page
+            if pb <= len(feed):
+                a = min(a, pb - t)
+        t_max = int(self._p0[slot]) + req.params.max_new_tokens - 1
+        return max(1, min(a, t_max - t, self.scfg.max_len - t))
+
+    def _quantum(self, events: List[Event], by_rid: Dict[int, Request]) -> None:
+        S = self.scfg.n_slots
+        Q = self.scfg.decode_quantum
+        page = self.pcfg.page_size
+        adv = np.zeros((S,), np.int32)
+        for slot, req in list(self.residents.items()):
+            adv[slot] = self._plan_adv(slot, req)
+        # capacity: strongest-first so preemption cascades deterministically
+        order = sorted(self.residents,
+                       key=lambda s: self._strength(self.residents[s]),
+                       reverse=True)
+        for slot in order:
+            if slot not in self.residents:  # preempted by a stronger slot
+                continue
+            if not self._ensure_writable(slot, int(self._t[slot]),
+                                         int(adv[slot])):
+                adv[slot] = 0  # stalled this quantum; retried next tick
+        active = np.zeros((S,), bool)
+        m = np.zeros((S,), np.int32)
+        F = np.zeros((S, Q), np.int32)
+        temps = np.zeros((S,), np.float32)
+        topks = np.zeros((S,), np.int32)
+        rids = np.zeros((S,), np.int32)
+        for slot, req in self.residents.items():
+            if adv[slot] == 0:
+                continue
+            active[slot] = True
+            t = int(self._t[slot])
+            feed = self._feed[slot]
+            mm = max(0, min(len(feed) - t, int(adv[slot])))
+            m[slot] = mm
+            if mm:
+                F[slot, :mm] = feed[t:t + mm]
+            temps[slot] = req.params.temperature
+            topks[slot] = req.params.top_k
+            rids[slot] = req.rid
+        if not active.any():
+            return
+        feed0 = np.where(m > 0, F[:, 0], self._last).astype(np.int32)
+        feed_next = np.zeros((Q, S), np.int32)
+        feed_next[: Q - 1] = F[:, 1:].T
+        covered = int(max(
+            (math.ceil((int(self._t[s]) + int(adv[s])) / page)
+             for s in self.residents if adv[s] > 0),
+            default=1,
+        ))
+        pv = _pow2_bucket(max(covered, 1), self._pages_max)
+        table = jnp.asarray(self._table[:, :pv])
+        quantum, _, _, _, _, _ = self._ops()
+        with self.ctx.scope():
+            toks, emits, self._phys, self._pinned = quantum(
+                self.params, self._phys, self._pinned, self._shared, table,
+                jnp.asarray(feed0), jnp.asarray(feed_next),
+                jnp.asarray(m), jnp.asarray(adv),
+                jnp.asarray(self._t, jnp.int32),
+                jnp.asarray(self._p0, jnp.int32),
+                jnp.asarray(active), jnp.asarray(temps), jnp.asarray(topks),
+                jnp.asarray(rids), self._base_key,
+                cfg=self.cfg, ctx=self.ctx, dtype=self.scfg.cache_dtype,
+                spec=self.spec, quantum=Q,
+                sampled=bool((temps[active] > 0.0).any()),
+                truncated=bool((topks[active] > 0).any()),
+            )
+        toks = np.asarray(toks)
+        emits = np.asarray(emits)
+        for slot in sorted(list(self.residents)):
+            req = self.residents[slot]
+            if not active[slot]:
+                continue
+            by_rid[req.rid] = req
+            a = int(adv[slot])
+            t0 = int(self._t[slot])
+            p0 = int(self._p0[slot])
+            done = False
+            for q in range(a):
+                if not emits[q, slot]:
+                    continue
+                count = t0 + q + 1 - p0
+                if count < req.n_emitted:
+                    continue  # re-derived during a continuation refeed
+                tok = int(toks[q, slot])
+                req.tokens.append(tok)
+                met = self.request_metrics[req.rid]
+                if met["first_token_tick"] is None:
+                    met["first_token_tick"] = self._tick
+                done = req.finished(tok)
+                events.append(Event(req.rid, tok, done))
+                if done:
+                    break
+            if done:
+                self._finish_slot(slot)
+                continue
+            self._t[slot] = t0 + a
+            if emits[a - 1, slot]:
+                self._last[slot] = int(toks[a - 1, slot])
+            self._maybe_insert_prefix(slot)
+
+    def _maybe_insert_prefix(self, slot: int) -> None:
+        """After a quantum ending exactly at a page boundary inside the
+        prompt feed, record the prefix in the radix tree with a pinned
+        snapshot taken at that boundary."""
+        if self.radix is None:
+            return
+        t = int(self._t[slot])
+        page = self.pcfg.page_size
+        feed = self._feed[slot]
+        if t == 0 or t % page != 0 or t > len(feed):
+            return
+        blocks = [int(b) for b in self._table[slot, : t // page]]
+        _, _, _, snap_fn, _, _ = self._ops()
+        with self.ctx.scope():
+            snap = snap_fn(self._pinned, jnp.asarray(slot, jnp.int32),
+                           spec=self.spec)
+        self.radix.insert(feed[:t], blocks, snap)
+
+    # ------------------------------------------------------------ release
+    def _release_slot(self, slot: int) -> None:
+        freed = []
+        for pg in range(self._pages_max):
+            bid = int(self._table[slot, pg])
+            if bid and self.alloc.decref(bid):
+                freed.append(bid)
+        self._table[slot] = 0
+        self._zero_freed(freed)
+        _, _, _, _, _, preset = self._ops()
+        with self.ctx.scope():
+            self._pinned = preset(self._pinned, jnp.asarray(slot, jnp.int32),
+                                  spec=self.spec)
+        req = self.residents.pop(slot)
+        req.slot = -1
+        self._feed.pop(slot, None)
+        self._t[slot] = 0
+        self._p0[slot] = 0
+        self._last[slot] = 0
+        self._free_slots.append(slot)
+
+    def _finish_slot(self, slot: int) -> None:
+        rid = self.residents[slot].rid
+        self.request_metrics[rid]["done_tick"] = self._tick
+        self._release_slot(slot)
+
+    def _evict_slot(self, slot: int) -> None:
+        req = self.residents[slot]
+        self._release_slot(slot)
+        req.evictions += 1
+        self.queue.push_readmit(req.rid)
+
+    # ------------------------------------------------------- bookkeeping
+    def _dispatch_streams(self, events: List[Event], by_rid) -> None:
+        for ev in events:
+            req = by_rid.get(ev.rid)
+            if req is not None and req.stream is not None:
+                req.stream(ev.rid, ev.token, ev.done)
+
+    def _prune_finished(self) -> None:
+        live = set(self.queue.rids())
+        live |= {r.rid for r in self.residents.values()}
+        for rid in [r for r in self._requests if r not in live]:
+            req = self._requests.pop(rid)
+            self._results[rid] = np.asarray(req.tokens, np.int32)
+            self._prio.pop(rid, None)
+            self._deadline.pop(rid, None)
+
+    # ---------------------------------------------------- jitted-op access
+    def _ops(self):
+        """(quantum, copy, zero, snapshot, restore, pinned_reset) —
+        process-shared for meshless engines; mesh engines wrap each op with
+        sharding constraints pinning the pools to the rule-derived layout
+        (same pattern as the dense engine's ``_pool_ops``)."""
+        if self.ctx.mesh is None:
+            return _jitted_paged_ops()
+        if self._mesh_ops is None:
+            phys_sh, pin_sh, shr_sh = self._shardings
+
+            def cphys(leaves):
+                return [
+                    jax.lax.with_sharding_constraint(x, s)
+                    for x, s in zip(leaves, phys_sh)
+                ]
+
+            def cpin(leaves):
+                return [
+                    jax.lax.with_sharding_constraint(x, s)
+                    for x, s in zip(leaves, pin_sh)
+                ]
+
+            def quantum_impl(params, phys, pinned, shared, table, feed0,
+                             feed_next, m, adv, t0, p0, active, temps,
+                             topks, rids, base_key, *, cfg, ctx, dtype,
+                             spec, quantum, sampled, truncated):
+                toks, emits, ph, pi = _paged_quantum_impl(
+                    params, cphys(phys), cpin(pinned), shared, table,
+                    feed0, feed_next, m, adv, t0, p0, active, temps,
+                    topks, rids, base_key, cfg=cfg, ctx=ctx, dtype=dtype,
+                    spec=spec, quantum=quantum, sampled=sampled,
+                    truncated=truncated,
+                )
+                return toks, emits, cphys(ph), cpin(pi)
+
+            def copy_impl(phys, src, dst, *, spec):
+                return cphys(_copy_blocks_impl(cphys(phys), src, dst,
+                                               spec=spec))
+
+            def zero_impl(phys, blocks, *, spec):
+                return cphys(_zero_blocks_impl(cphys(phys), blocks,
+                                               spec=spec))
+
+            def restore_impl(pinned, slot, snap, *, spec):
+                return cpin(_pinned_restore_impl(cpin(pinned), slot, snap,
+                                                 spec=spec))
+
+            def preset_impl(pinned, slot, *, spec):
+                return cpin(_pinned_reset_impl(cpin(pinned), slot,
+                                               spec=spec))
+
+            donate = _donate_pool_args()
+            self._mesh_ops = (
+                jax.jit(
+                    quantum_impl,
+                    static_argnames=(
+                        "cfg", "ctx", "dtype", "spec", "quantum",
+                        "sampled", "truncated",
+                    ),
+                    donate_argnums=(1, 2) if donate else (),
+                ),
+                jax.jit(copy_impl, static_argnames=("spec",),
+                        donate_argnums=(0,) if donate else ()),
+                jax.jit(zero_impl, static_argnames=("spec",),
+                        donate_argnums=(0,) if donate else ()),
+                jax.jit(_pinned_snapshot_impl, static_argnames=("spec",)),
+                jax.jit(restore_impl, static_argnames=("spec",),
+                        donate_argnums=(0,) if donate else ()),
+                jax.jit(preset_impl, static_argnames=("spec",),
+                        donate_argnums=(0,) if donate else ()),
+            )
+        return self._mesh_ops

@@ -1,0 +1,171 @@
+"""Radix-tree prefix cache over paged mixer state (DESIGN.md §11).
+
+Requests sharing a system prompt should prefill it once.  The classic
+KV-cache trick — match the prompt against a radix tree of previously
+prefilled token runs and fork the matched blocks copy-on-write — assumes
+the *entire* per-token state lives in pageable KV.  Here it doesn't:
+hyena carries a rolling short-conv window and a cursor, recurrent mixers
+carry O(1) states, local attention carries a ring.  Those leaves are
+pinned (dense per-slot), so each radix node additionally stores a
+*pinned-state snapshot*: the batch-1 slice of every pinned cache leaf as
+it stood immediately after absorbing that node's page.  Forking a prefix
+therefore restores BOTH the paged blocks (by reference, COW) and the
+pinned rows (by copy), which is what makes prefix reuse correct for
+every decode-capable mixer rather than just attention.
+
+Tree shape: one node per *page* (``page_size`` tokens), keyed by the
+page's token tuple.  Nodes are only created at exact page boundaries —
+the engine clips prompt-feed quanta to page boundaries so the snapshot
+it hands us is exactly the state after ``depth * page_size`` tokens.
+Matching is whole-page and capped so at least one prompt token is left
+to feed (the model needs an input token to produce the first logits).
+
+Block references: each node holds one block id with a refcount taken on
+the shared :class:`~repro.serve.paged.BlockAllocator`; forks take their
+own ref.  LRU eviction (under allocator pressure, or random eviction in
+the parity harness) drops leaf nodes only, decrefs their block, and
+returns any block that hit refcount zero so the engine can zero it
+(invariant I3 of DESIGN.md §4 extends to physical blocks).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+
+class RadixNode:
+    __slots__ = ("tokens", "block", "snapshot", "children", "parent", "last_used")
+
+    def __init__(self, tokens: Tuple[int, ...], block: int,
+                 snapshot: Optional[List[Any]], parent: "RadixNode | None"):
+        self.tokens = tokens
+        self.block = block
+        self.snapshot = snapshot  # pinned leaves (batch-1) after this page
+        self.children: Dict[Tuple[int, ...], RadixNode] = {}
+        self.parent = parent
+        self.last_used = 0
+
+
+class RadixPrefixCache:
+    def __init__(self, page_size: int, allocator) -> None:
+        self.page = int(page_size)
+        self.alloc = allocator
+        self.root = RadixNode((), -1, None, None)
+        self._tick = 0
+        self.n_nodes = 0
+        self.hits = 0
+        self.misses = 0
+
+    # ------------------------------------------------------------- match
+    def match(self, tokens: Sequence[int]) -> Tuple[int, List[int], Optional[List[Any]]]:
+        """Longest whole-page prefix of ``tokens`` present in the tree.
+
+        Returns ``(n_matched_tokens, block_ids, snapshot)`` where
+        ``snapshot`` is the deepest matched node's pinned state.  The match
+        is capped at ``len(tokens) - 1`` so the caller always has a token
+        to feed.  Does NOT take block references — the caller increfs the
+        returned blocks if it commits to the fork.
+        """
+        limit = len(tokens) - 1
+        node, depth, blocks = self.root, 0, []
+        self._tick += 1
+        while depth + self.page <= limit:
+            key = tuple(int(t) for t in tokens[depth:depth + self.page])
+            child = node.children.get(key)
+            if child is None or child.snapshot is None:
+                break
+            child.last_used = self._tick
+            blocks.append(child.block)
+            node, depth = child, depth + self.page
+        if depth:
+            self.hits += 1
+        else:
+            self.misses += 1
+        snap = node.snapshot if depth else None
+        return depth, blocks, snap
+
+    # ------------------------------------------------------------ insert
+    def insert(self, tokens: Sequence[int], blocks: Sequence[int],
+               snapshot: List[Any]) -> bool:
+        """Record a fully-paged prefix: ``tokens`` (length = k * page) with
+        its backing ``blocks`` (one per page) and the pinned-state snapshot
+        taken after the final token.  Only the deepest node is (possibly)
+        new — the engine inserts at every page boundary as prefill
+        advances, so ancestors exist already; if one is missing (its chain
+        was LRU-evicted since the donor prefilled), it is re-created
+        without a snapshot and is unusable for forks until re-inserted.
+        Returns True if a new reference was taken for the deepest node.
+        """
+        n = len(tokens)
+        if n == 0 or n % self.page != 0 or n // self.page != len(blocks):
+            raise ValueError("insert requires a page-aligned prefix with one block per page")
+        self._tick += 1
+        node = self.root
+        for i, blk in enumerate(blocks):
+            key = tuple(int(t) for t in tokens[i * self.page:(i + 1) * self.page])
+            child = node.children.get(key)
+            last = i == len(blocks) - 1
+            if child is None:
+                child = RadixNode(key, int(blk), snapshot if last else None, node)
+                node.children[key] = child
+                self.alloc.incref(int(blk))
+                self.n_nodes += 1
+                child.last_used = self._tick
+                node = child
+                if last:
+                    return True
+            else:
+                child.last_used = self._tick
+                if last and child.snapshot is None:
+                    child.snapshot = snapshot
+                node = child
+        return False
+
+    # ----------------------------------------------------------- evict
+    def _leaves(self) -> List[RadixNode]:
+        out, stack = [], [self.root]
+        while stack:
+            n = stack.pop()
+            for c in n.children.values():
+                if c.children:
+                    stack.append(c)
+                else:
+                    out.append(c)
+        return out
+
+    def _drop(self, leaf: RadixNode) -> Optional[int]:
+        key = leaf.tokens
+        assert leaf.parent is not None and not leaf.children
+        del leaf.parent.children[key]
+        self.n_nodes -= 1
+        freed = self.alloc.decref(leaf.block)
+        return leaf.block if freed else None
+
+    def evict_lru(self, n_blocks: int = 1) -> List[int]:
+        """Drop up to ``n_blocks`` least-recently-used leaf nodes; returns
+        block ids whose refcount reached zero (caller must zero them)."""
+        zeroed: List[int] = []
+        for _ in range(n_blocks):
+            leaves = self._leaves()
+            if not leaves:
+                break
+            victim = min(leaves, key=lambda nd: nd.last_used)
+            blk = self._drop(victim)
+            if blk is not None:
+                zeroed.append(blk)
+        return zeroed
+
+    def evict_node(self, rng) -> List[int]:
+        """Drop one uniformly-random leaf (parity-harness chaos hook)."""
+        leaves = self._leaves()
+        if not leaves:
+            return []
+        victim = leaves[int(rng.integers(0, len(leaves)))]
+        blk = self._drop(victim)
+        return [blk] if blk is not None else []
+
+    def flush(self) -> List[int]:
+        """Drop every node; returns all blocks that hit refcount zero."""
+        zeroed: List[int] = []
+        while self.n_nodes:
+            zeroed.extend(self.evict_lru(self.n_nodes))
+        return zeroed

@@ -12,7 +12,8 @@ slot, what it has emitted, when it stops — and drives a model-agnostic
 Invariants (asserted by the randomized-schedule property harness):
 
   I1  a slot is owned by at most one request at a time; admission order is
-      FIFO over the queue.
+      FIFO over the queue, except that evicted requests readmit AHEAD of
+      queued arrivals (starvation-freedom under sustained load).
   I2  per-request outputs are schedule-independent: whatever the arrival /
       eviction interleaving, a greedy request r emits exactly the tokens
       the sequential ``generate()`` of r would (token-identical serving);
@@ -116,6 +117,11 @@ class Scheduler:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         self.n_slots = n_slots
         self.queue: deque[Request] = deque()
+        # evicted requests re-enter HERE, drained before the arrival queue:
+        # under sustained arrivals a FIFO requeue starves preempted requests
+        # indefinitely (each readmission attempt lines up behind every
+        # arrival that landed during its residency)
+        self.readmit: deque[Request] = deque()
         self.slots: Dict[int, Request] = {}  # slot -> resident request
         self._free: List[int] = list(range(n_slots))[::-1]  # pop() -> slot 0 first
 
@@ -126,7 +132,7 @@ class Scheduler:
 
     @property
     def idle(self) -> bool:
-        return not self.queue and not self.slots
+        return not self.queue and not self.readmit and not self.slots
 
     # ------------------------------------------------------------ mutation
     def submit(self, req: Request) -> None:
@@ -141,7 +147,7 @@ class Scheduler:
                 self._release(slot, backend)
                 req.slot = -1
                 req.evictions += 1
-                self.queue.append(req)  # FIFO: re-admitted after the queue
+                self.readmit.append(req)  # ahead of every queued arrival
                 return True
         return False
 
@@ -177,9 +183,11 @@ class Scheduler:
         per admission), then a single jitted decode step over the pool."""
         events: List[Event] = []
         by_rid: Dict[int, Request] = {}
-        # 1. admission: prefill-into-free-slots, FIFO
-        while self.queue and self._free:
-            req = self.queue.popleft()
+        # 1. admission: prefill-into-free-slots — readmitted (previously
+        # evicted) requests first, then FIFO over new arrivals
+        while (self.readmit or self.queue) and self._free:
+            req = (self.readmit.popleft() if self.readmit
+                   else self.queue.popleft())
             slot = self._free.pop()
             self.slots[slot] = req
             req.slot = slot

@@ -1,0 +1,98 @@
+"""Priority/SLO-aware admission (DESIGN.md §11).
+
+Replaces FIFO admission for the paged engine: requests carry a priority
+class and an optional deadline, and the queue orders admission by
+
+    (readmitted first) > priority (higher first) > deadline (earlier
+    first) > arrival order
+
+Two starvation guards, both load-bearing under overload:
+
+  * evicted (preempted) requests re-enter through a dedicated readmit
+    deque that is always drained BEFORE the priority queue — a preempted
+    request can never be pushed behind a stream of new arrivals of equal
+    priority (the regression the dense scheduler satellite also fixes);
+  * priority preemption is one-way: an admission candidate may preempt a
+    strictly lower-priority resident, and the victim re-enters the readmit
+    deque, so ping-pong between equal priorities is impossible.
+
+Deadlines are scheduler ticks (engine steps), not wall seconds: the engine
+has no clock of its own, and tick-denominated deadlines keep schedules
+deterministic and replayable.  ``None`` means "no deadline" and sorts last
+within a priority class.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from collections import deque
+from typing import Iterator, Optional, Tuple
+
+
+class SLOQueue:
+    """Admission queue: readmit deque + (priority, deadline, seq) heap."""
+
+    def __init__(self) -> None:
+        self._heap: list = []  # (-priority, deadline, seq, rid)
+        self._readmit: deque = deque()  # rids, FIFO
+        self._seq = 0
+
+    def __len__(self) -> int:
+        return len(self._heap) + len(self._readmit)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap) or bool(self._readmit)
+
+    def push(self, rid: int, priority: int = 0,
+             deadline: Optional[int] = None) -> None:
+        key = math.inf if deadline is None else float(deadline)
+        heapq.heappush(self._heap, (-int(priority), key, self._seq, rid))
+        self._seq += 1
+
+    def push_readmit(self, rid: int) -> None:
+        """Re-enter a preempted request AHEAD of every queued arrival
+        (relative readmit order preserved — FIFO among the preempted)."""
+        self._readmit.append(rid)
+
+    def peek(self) -> Optional[Tuple[int, bool]]:
+        """(rid, is_readmit) of the next admission candidate, or None."""
+        if self._readmit:
+            return self._readmit[0], True
+        if self._heap:
+            return self._heap[0][3], False
+        return None
+
+    def pop(self) -> Optional[int]:
+        if self._readmit:
+            return self._readmit.popleft()
+        if self._heap:
+            return heapq.heappop(self._heap)[3]
+        return None
+
+    def peek_priority(self) -> Optional[int]:
+        """Priority of the best queued (non-readmit) arrival — the
+        preemption trigger compares this against resident priorities.
+        Readmitted requests never trigger further preemption (one-way)."""
+        if self._heap:
+            return -self._heap[0][0]
+        return None
+
+    def rids(self) -> Iterator[int]:
+        yield from self._readmit
+        for _, _, _, rid in sorted(self._heap):
+            yield rid
+
+    def remove(self, rid: int) -> bool:
+        """Drop a queued request (cancellation); O(n), rare path."""
+        try:
+            self._readmit.remove(rid)
+            return True
+        except ValueError:
+            pass
+        for i, ent in enumerate(self._heap):
+            if ent[3] == rid:
+                self._heap[i] = self._heap[-1]
+                self._heap.pop()
+                heapq.heapify(self._heap)
+                return True
+        return False

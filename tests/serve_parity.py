@@ -125,3 +125,254 @@ def compare_schedule(arch, seed, n_data=2, n_model=4, expect_sharded=True):
         ]
         assert any(any(e is not None for e in s) for s in specs), specs
     return len(got_single)
+
+
+# ----------------------------------------------------------- paged engine
+#
+# The paged engine absorbs prompts through the decode path (chunked
+# prefill), so its logits match the batched-prefill reference to
+# *tolerance*, not bit-exactly — different reduction shapes re-associate
+# fp sums, and greedy argmax can flip on a near-tie.  The comparison
+# therefore replays each request against a reference that carries the
+# engine's own (seed, rid, token index) key streams and per-step tie gaps:
+# a mismatch is accepted only where the reference's decision margin is
+# below TIE_TOL (a genuine near-tie), after which the histories diverge
+# and comparison for that request stops.  Mesh-vs-meshless paged runs use
+# the same program on both sides and must match exactly.
+
+from repro.serve.engine import request_token_key
+from repro.serve.paged import PagedConfig, PagedServeEngine
+from repro.serve.sampling import top_k_mask
+
+TIE_TOL = 1e-4
+PAGED_MAX_STEPS = 600
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "scfg"))
+def _ref_prefill(params, prompt, *, cfg, scfg):
+    ctx = scfg.apply_context()
+    p = ctx.cast_compute(params)
+    compute = ctx.compute_dtype or scfg.cache_dtype
+    logits, caches = lm.prefill(
+        p, cfg, prompt, scfg.max_len, dtype=scfg.cache_dtype,
+        compute_dtype=compute, ctx=ctx,
+    )
+    return logits[:, -1], caches
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "scfg"))
+def _ref_decode(params, tok, caches, *, cfg, scfg):
+    ctx = scfg.apply_context()
+    p = ctx.cast_compute(params)
+    compute = ctx.compute_dtype or scfg.cache_dtype
+    return lm.decode_step(p, cfg, tok, caches, compute_dtype=compute,
+                          ctx=ctx)
+
+
+def sampled_scores(key, logits, temperature, top_k):
+    """The decision scores behind ``sample_slots`` for one row: greedy
+    rows decide on raw logits, sampled rows on the temperature-scaled,
+    top-k-masked, gumbel-perturbed logits (argmax of these IS the sampled
+    token — the gumbel trick ``jax.random.categorical`` uses, with the
+    same key).  Unit-pinned against sample_slots in test_serve_engine."""
+    lg = jnp.asarray(logits, jnp.float32)
+    if temperature <= 0.0:
+        return lg
+    scaled = lg / max(temperature, 1e-6)
+    masked = top_k_mask(scaled, jnp.asarray(top_k, jnp.int32))
+    return masked + jax.random.gumbel(key, masked.shape, masked.dtype)
+
+
+def paged_reference(cfg, params, scfg, prompt, sp, rid, seed=0):
+    """Expected stream for one request under the engine's key streams,
+    plus the per-step decision margin (top-2 score gap) used to classify
+    mismatches as near-ties."""
+    base_key = jax.random.PRNGKey(seed)
+    lg, caches = _ref_prefill(
+        params, jnp.asarray(prompt[None]), cfg=cfg, scfg=scfg,
+    )
+    lg = lg[0]
+    toks, gaps = [], []
+    for k in range(sp.max_new_tokens):
+        key = request_token_key(base_key, jnp.asarray(rid, jnp.int32),
+                                jnp.asarray(k, jnp.int32))
+        scores = sampled_scores(key, lg, sp.temperature, sp.top_k)
+        top2 = jax.lax.top_k(scores, 2)[0]
+        tok = int(jnp.argmax(scores))
+        toks.append(tok)
+        gaps.append(float(top2[0] - top2[1]))
+        if tok in sp.stop_tokens:
+            break
+        lg, caches = _ref_decode(
+            params, jnp.asarray([tok], jnp.int32), caches,
+            cfg=cfg, scfg=scfg,
+        )
+        lg = lg[0]
+    return toks, gaps
+
+
+def compare_request(got, want, gaps, label):
+    """Token-identical up to the first reference near-tie (margin below
+    TIE_TOL), after which histories legitimately diverge."""
+    for i, g in enumerate(got):
+        assert i < len(want), (
+            f"{label}: emitted {len(got)} tokens past the reference's "
+            f"stop at {len(want)} without a near-tie divergence: {got}"
+        )
+        if g != want[i]:
+            assert gaps[i] < TIE_TOL, (
+                f"{label}: token {i} diverged ({g} != {want[i]}) with a "
+                f"decision margin of {gaps[i]:.3e} — a real mismatch, not "
+                f"a near-tie.  got={got} want={want}"
+            )
+            return
+    assert len(got) == len(want), (
+        f"{label}: stream truncated without divergence: {got} vs {want}"
+    )
+
+
+def make_paged_plan(rng, vocab):
+    """Randomized paged-serving scenario: a shared system prefix (~half
+    the requests fork it), mixed greedy/sampled requests, priorities,
+    random page size / quantum, and optional block-pool pressure."""
+    page = int(rng.choice([2, 4]))
+    quantum = int(rng.integers(1, 4))
+    shared = rng.integers(0, vocab, size=int(rng.integers(4, 11))).astype(
+        np.int32
+    )
+    n_req = int(rng.integers(3, 6))
+    reqs = []
+    for _ in range(n_req):
+        if rng.random() < 0.5:
+            tail = rng.integers(0, vocab, size=int(rng.integers(1, 5)))
+            prompt = np.concatenate([shared, tail]).astype(np.int32)
+        else:
+            prompt = rng.integers(
+                0, vocab, size=int(rng.integers(3, 9))
+            ).astype(np.int32)
+        sampled = rng.random() < 0.3
+        reqs.append({
+            "arrival": int(rng.integers(0, 7)),
+            "prompt": prompt,
+            "max_new": int(rng.integers(1, H_MAX + 1)),
+            "stop": tuple(
+                int(t) for t in rng.integers(0, vocab, size=2)
+            ) if rng.random() < 0.4 else (),
+            "temperature": 0.7 if sampled else 0.0,
+            "top_k": 4 if (sampled and rng.random() < 0.5) else 0,
+            "priority": int(rng.integers(0, 3)),
+        })
+    reqs.sort(key=lambda p: p["arrival"])
+    max_need = max(
+        -(-(len(p["prompt"]) + p["max_new"]) // page) for p in reqs
+    )
+    n_blocks = 0  # auto (no pressure)
+    if rng.random() < 0.5:  # tight pool: forces preemption cascades
+        n_blocks = max_need + int(rng.integers(0, max_need + 1)) + 1
+    pcfg = PagedConfig(page_size=page, n_blocks=n_blocks,
+                       prefix_cache=bool(rng.random() < 0.8))
+    scfg = dataclasses.replace(SCFG, decode_quantum=quantum)
+    coins = {
+        "evict": [bool(rng.random() < 0.25) for _ in range(64)],
+        "radix": [bool(rng.random() < 0.25) for _ in range(64)],
+    }
+    return reqs, scfg, pcfg, coins
+
+
+def run_paged_plan(eng, reqs, coins, chaos_rng):
+    """Drive arrivals + chaos (resident eviction, random radix-node drops)
+    until drained; returns rid -> tokens and rid -> plan entry."""
+    pending = list(reqs)
+    rid_of = {}
+    t, n_evicted = 0, 0
+    while pending or not eng.idle:
+        while pending and pending[0]["arrival"] <= t:
+            p = pending.pop(0)
+            rid_of[eng.submit(
+                p["prompt"], max_new_tokens=p["max_new"],
+                stop_tokens=p["stop"], temperature=p["temperature"],
+                top_k=p["top_k"], priority=p["priority"],
+            )] = p
+        coin = coins["evict"][min(t, 63)]
+        if n_evicted < 2 and eng.residents and coin:
+            victim = min(r.rid for r in eng.residents.values())
+            if eng.evict(victim):
+                n_evicted += 1
+        if coins["radix"][min(t, 63)]:
+            eng.evict_prefix_node(chaos_rng)
+        eng.step()
+        t += 1
+        assert t < PAGED_MAX_STEPS, "paged schedule failed to drain"
+    return {rid: [int(x) for x in toks]
+            for rid, toks in eng.results().items()}, rid_of
+
+
+def check_paged_schedule(arch, seed, *, ectx=None, param_axes=None):
+    """One randomized paged schedule vs the per-request reference (tie-
+    aware), then the clean-pool invariants.  Returns (results, plan map,
+    scfg) so callers can run additional comparisons."""
+    cfg, params, axes = setup(arch)
+    rng = np.random.default_rng(seed)
+    reqs, scfg, pcfg, coins = make_paged_plan(rng, cfg.vocab_size)
+    eng = PagedServeEngine(
+        params, cfg, scfg, pcfg, ectx=ectx,
+        param_axes=param_axes if ectx is not None else None,
+    )
+    got, rid_of = run_paged_plan(eng, reqs, coins,
+                                 np.random.default_rng(seed + 1))
+    from repro.serve.scheduler import SamplingParams
+
+    for rid, p in rid_of.items():
+        sp = SamplingParams(
+            max_new_tokens=p["max_new"], temperature=p["temperature"],
+            top_k=p["top_k"], stop_tokens=p["stop"],
+        )
+        want, gaps = paged_reference(cfg, params, scfg, p["prompt"], sp, rid)
+        compare_request(
+            got[rid], want, gaps,
+            f"{arch} seed={seed} rid={rid} "
+            f"(page={pcfg.page_size} q={scfg.decode_quantum} "
+            f"blocks={pcfg.n_blocks} prefix={pcfg.prefix_cache})",
+        )
+    eng.flush_prefix()
+    eng.check_clean()
+    return got, rid_of, scfg
+
+
+def compare_paged_mesh(arch, seed, n_data=2, n_model=4,
+                       expect_sharded=True):
+    """The same randomized paged schedule on a debug mesh vs meshless:
+    identical programs, so token streams must match exactly; the physical
+    block pool must be genuinely sharded."""
+    cfg, params, axes = setup(arch)
+    rng = np.random.default_rng(seed)
+    reqs, scfg, pcfg, coins = make_paged_plan(rng, cfg.vocab_size)
+
+    single = PagedServeEngine(params, cfg, scfg, pcfg)
+    got_single, _ = run_paged_plan(single, reqs, coins,
+                                   np.random.default_rng(seed + 1))
+
+    mesh = make_debug_mesh(n_data, n_model)
+    ectx = ExecutionContext(mesh=mesh)
+    meshed = PagedServeEngine(params, cfg, scfg, pcfg, ectx=ectx,
+                              param_axes=axes)
+    got_mesh, _ = run_paged_plan(meshed, reqs, coins,
+                                 np.random.default_rng(seed + 1))
+
+    assert set(got_single) == set(got_mesh)
+    for rid in got_single:
+        assert got_single[rid] == got_mesh[rid], (
+            f"{arch} seed={seed}: paged rid {rid} diverged on the mesh: "
+            f"{got_mesh[rid]} != {got_single[rid]}"
+        )
+    for eng in (single, meshed):
+        eng.flush_prefix()
+        eng.check_clean()
+    if expect_sharded:
+        specs = [
+            leaf.sharding.spec
+            for leaf in meshed._phys + meshed._pinned + meshed._shared
+            if hasattr(leaf.sharding, "spec")
+        ]
+        assert any(any(e is not None for e in s) for s in specs), specs
+    return len(got_single)

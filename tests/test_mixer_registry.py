@@ -419,3 +419,98 @@ def test_pattern_validated_at_config_registration():
         register(dataclasses.replace(
             small_cfg("attention"), name="bad-arch", pattern=("atention",)
         ))
+
+
+@pytest.mark.parametrize("mixer", BUILTIN_MIXERS)
+def test_cache_page_axes_conformance(mixer):
+    """The paging contract (mixer_api.cache_page_axes): every named key
+    exists in the cache on the max_len grid with its time axis exactly one
+    past the slot axis; those leaves really are append-only (positions
+    below the cursor never move once written); and decode tolerates
+    arbitrary garbage at positions >= t — the property that lets the paged
+    allocator map unwritten table entries to a recycled trash block."""
+    cfg = small_cfg(mixer)
+    m = get_mixer(mixer)
+    mc = m.make_config(cfg)
+    spec = m.cache_page_axes(mc)
+    slots = m.cache_slot_axes(mc)
+    B, L, L0 = 2, 12, 6
+    params, _ = split_params(m.init(jax.random.PRNGKey(0), mc))
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (B, L, cfg.d_model))
+    _, cache = m.prefill(params, mc, x[:, :L0], L, jnp.float32,
+                         ApplyContext())
+    for k, ax in spec.items():
+        assert k in cache, (mixer, k)
+        assert slots.get(k, 0) >= 0, (mixer, k, "paged leaf must be per-slot")
+        assert ax == slots.get(k, 0) + 1, (mixer, k, ax)
+        assert cache[k].shape[ax] == L, (mixer, k, cache[k].shape)
+    if not spec:
+        return  # windowed / recurrent mixers: all state pinned
+
+    def time_slice(leaf, ax, lo, hi):
+        idx = [slice(None)] * leaf.ndim
+        idx[ax] = slice(lo, hi)
+        return np.asarray(leaf[tuple(idx)], np.float32)
+
+    def corrupt(leaf, ax, start):
+        pos = jnp.arange(leaf.shape[ax]).reshape(
+            [leaf.shape[ax] if d == ax else 1 for d in range(leaf.ndim)]
+        )
+        return jnp.where(pos >= start, jnp.asarray(37.5, leaf.dtype), leaf)
+
+    # garbage past the cursor must be invisible to decode (it is either
+    # masked or overwritten at the write position before any read)
+    dirty = {
+        k: corrupt(v, spec[k], L0) if k in spec else v
+        for k, v in cache.items()
+    }
+    clean, c, d = cache, cache, dirty
+    for t in range(L0, L):
+        y_c, c = m.decode_step(params, mc, x[:, t], c)
+        y_d, d = m.decode_step(params, mc, x[:, t], d)
+        np.testing.assert_allclose(
+            np.asarray(y_c, np.float32), np.asarray(y_d, np.float32),
+            rtol=1e-6, atol=1e-6,
+            err_msg=f"{mixer} step {t}: garbage past the cursor leaked",
+        )
+        # append-only: everything before this step's write position is
+        # byte-stable across the step
+        for k, ax in spec.items():
+            np.testing.assert_array_equal(
+                time_slice(c[k], ax, 0, t), time_slice(clean[k], ax, 0, t),
+                err_msg=f"{mixer}.{k} rewrote history at step {t}",
+            )
+        clean = {k: v for k, v in c.items()}
+
+
+def test_cache_page_axes_lm_collector_validates_adjacency():
+    """lm.cache_page_axes mirrors the cache tree with the paged time axis
+    (shifted for scan-stacked groups) or -1, and rejects specs whose time
+    axis is not slot + 1."""
+    cfg = small_cfg("attention")
+    m = get_mixer("attention")
+    mc = m.make_config(cfg)
+    params, _ = split_params(m.init(jax.random.PRNGKey(0), mc))
+    cache = m.prefill(params, mc, jnp.zeros((1, 4, cfg.d_model)), 8,
+                      jnp.float32, ApplyContext())[1]
+    caches = {"groups": [cache]}
+    axes = lm.cache_page_axes(cfg, caches)
+    page_spec = m.cache_page_axes(mc)
+    for k in cache:
+        want = page_spec[k] + 1 if k in page_spec else -1  # stacked shift
+        assert axes["groups"][0][k] == want, (k, axes["groups"][0][k])
+
+    class BadMixer(type(m)):
+        name = "bad-paging"
+
+        def cache_page_axes(self, mc):
+            return {"k": 3}  # k's slot axis is 0 -> time axis must be 1
+
+    import unittest.mock as mock
+
+    import repro.models.mixer_api as mixer_api
+
+    with mock.patch.object(mixer_api, "get_mixer",
+                           lambda name: BadMixer()):
+        with pytest.raises(ValueError, match="slot axis"):
+            lm.cache_page_axes(cfg, caches)

@@ -87,3 +87,54 @@ for _arch, _nd, _nm in (("hyena-153m", 2, 4), ("phi4-mini-3.8b", 4, 2)):
     _t = _make_property(_arch, _nd, _nm)
     globals()[_t.__name__] = _t
 del _t
+
+
+# ---------------------------------------------------------------- paged
+#
+# The paged engine's mesh parity is exact (same program both sides); the
+# randomized plans additionally cover prefix forks, chunked prefill, block
+# pressure, and radix chaos — shapes the dense compare_schedule never hits.
+
+def test_mesh_paged_serve_fixed_schedule():
+    """Fast-tier pin: one fixed randomized paged schedule on hyena, 2×4
+    mesh vs meshless, token-identical with a genuinely sharded block
+    pool."""
+    out = run_subprocess("""
+        import serve_parity
+        n = serve_parity.compare_paged_mesh("hyena-153m", seed=1234)
+        print("OK", n, "requests")
+    """)
+    assert "OK" in out
+
+
+def _make_paged_property(arch, n_data, n_model):
+    def harness():
+        out = run_subprocess(f"""
+            import numpy as np
+            import serve_parity
+            rng = np.random.default_rng(11)
+            for ex in range({N_EXAMPLES}):
+                seed = int(rng.integers(0, 1 << 30))
+                try:
+                    serve_parity.compare_paged_mesh(
+                        "{arch}", seed, n_data={n_data}, n_model={n_model},
+                    )
+                except Exception as e:
+                    raise AssertionError(
+                        f"paged mesh serve parity failed on example {{ex}} "
+                        f"(seed {{seed}}): {{e}}"
+                    ) from e
+            print("OK")
+        """)
+        assert "OK" in out
+
+    harness.__name__ = (
+        f"test_mesh_paged_serve_randomized_{arch.replace('-', '_')}"
+    )
+    return pytest.mark.slow(harness)
+
+
+for _arch, _nd, _nm in (("hyena-153m", 2, 4), ("phi4-mini-3.8b", 4, 2)):
+    _t = _make_paged_property(_arch, _nd, _nm)
+    globals()[_t.__name__] = _t
+del _t

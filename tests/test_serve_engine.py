@@ -238,3 +238,278 @@ def test_submit_validation():
         eng.submit(np.array([], np.int32), max_new_tokens=1)
     with pytest.raises(ValueError, match="max_new_tokens"):
         eng.submit(np.array([1]), max_new_tokens=0)
+
+
+# ---------------------------------------------------------------- paged
+#
+# The paged engine's randomized harness (reference construction, tie-aware
+# comparison, plan generation) lives in tests/serve_parity.py so the
+# distributed suite can drive the identical scenarios in its 8-device
+# subprocesses; here we pin fixed seeds in the fast tier, run the full
+# property sweep per mixer family in the slow tier, and unit-test the
+# paged substrate (allocator, SLO queue, radix tree, COW, drain budgets).
+import serve_parity
+from repro.serve.engine import DrainExhausted, request_token_key
+from repro.serve.paged import BlockAllocator, PagedConfig, PagedServeEngine
+from repro.serve.radix import RadixPrefixCache
+from repro.serve.sampling import sample_slots
+from repro.serve.slo import SLOQueue
+
+PCFG = PagedConfig(page_size=4)
+
+
+def test_paged_schedule_fixed_seed():
+    """Fast-tier pin: one fixed randomized paged schedule (prefix sharing,
+    chunked prefill, eviction + radix chaos) on hyena, tie-aware
+    token-identical to the sequential reference."""
+    serve_parity.check_paged_schedule("hyena-153m", 1234)
+
+
+def _make_paged_harness(arch):
+    @prop.given(seed=prop.integers(0, 1 << 30))
+    def harness(seed):
+        serve_parity.check_paged_schedule(arch, seed)
+
+    harness.__name__ = f"test_paged_randomized_{arch.replace('-', '_')}"
+    return pytest.mark.slow(harness)
+
+
+for _arch in HARNESS_ARCHS:
+    _t = _make_paged_harness(_arch)
+    globals()[_t.__name__] = _t
+del _t
+
+
+def test_paged_prefix_fork_restores_pinned_state():
+    """Two staggered requests sharing an 10-token system prompt: the
+    second forks the radix prefix (8 cached tokens at page 4) and both
+    emit exactly the sequential reference — on hyena, whose cache mixes
+    paged operand history with pinned short-conv windows and cursors, so
+    a fork is only correct if the pinned snapshot is restored too."""
+    cfg, params, _ = serve_parity.setup("hyena-153m")
+    scfg = serve_parity.SCFG
+    eng = PagedServeEngine(params, cfg, scfg, PCFG)
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size, size=10).astype(np.int32)
+    r0 = eng.submit(shared, max_new_tokens=4)
+    out = dict(eng.drain())  # r0 finishes; its prefix pages are inserted
+    p1 = np.concatenate([shared, [5, 7]]).astype(np.int32)
+    r1 = eng.submit(p1, max_new_tokens=4)
+    out.update(eng.drain())
+    assert eng.request_metrics[r1]["prefix_cached_tokens"] == 8
+    for rid, prompt in ((r0, shared), (r1, p1)):
+        ref = np.asarray(generate(
+            params, cfg, jnp.asarray(prompt[None]), scfg=scfg,
+            max_new_tokens=4,
+        ))[0]
+        assert [int(t) for t in out[rid]] == [int(t) for t in ref], rid
+    eng.flush_prefix()
+    eng.check_clean()
+
+
+def test_paged_sampled_schedule_independent():
+    """A sampled request's tokens depend only on (seed, rid, token index):
+    forking a cached prefix vs prefilling from scratch yields the same
+    stream."""
+    cfg, params, _ = serve_parity.setup("hyena-153m")
+    scfg = serve_parity.SCFG
+    prompt = np.arange(1, 9, dtype=np.int32)
+    outs = []
+    for prefix_cache in (True, False):
+        eng = PagedServeEngine(
+            params, cfg, scfg,
+            PagedConfig(page_size=4, prefix_cache=prefix_cache),
+        )
+        warm = eng.submit(prompt, max_new_tokens=2)
+        for _ in range(4):
+            eng.step()
+        eng._next_rid = 17  # same rid -> same per-request key stream
+        rid = eng.submit(prompt, max_new_tokens=4, temperature=0.9,
+                         top_k=8)
+        out = eng.drain()
+        outs.append([int(t) for t in out[rid]])
+        del warm
+    assert outs[0] == outs[1], outs
+
+
+def test_sampled_scores_reproduces_sample_slots():
+    """The parity harness's reference reproduces sample_slots exactly: a
+    sampled row's token is the argmax of the temperature-scaled, top-k
+    masked, gumbel-perturbed logits under the same per-request key."""
+    rng = np.random.default_rng(3)
+    logits = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+    temps = jnp.asarray([0.0, 0.8, 1.3, 0.5], jnp.float32)
+    topks = jnp.asarray([0, 0, 8, 3], jnp.int32)
+    base = jax.random.PRNGKey(0)
+    keys = jnp.stack([
+        request_token_key(base, jnp.asarray(r, jnp.int32),
+                          jnp.asarray(2, jnp.int32))
+        for r in range(4)
+    ])
+    got = sample_slots(keys, logits, temps, topks)
+    for r in range(4):
+        want = int(jnp.argmax(serve_parity.sampled_scores(
+            keys[r], logits[r], float(temps[r]), int(topks[r]),
+        )))
+        assert int(got[r]) == want, r
+
+
+def test_scheduler_readmission_beats_new_arrivals():
+    """Starvation regression (dense engine): an evicted request re-enters
+    AHEAD of queued arrivals — under a 1-slot pool with a backlog, FIFO
+    requeue would park the victim behind every arrival forever."""
+    cfg, params = setup("hyena-153m")
+    scfg = dataclasses.replace(SCFG, n_slots=1)
+    eng = ServeEngine(params, cfg, scfg)
+    prompts = {
+        "a": np.array([3, 5, 7, 2], np.int32),
+        "b": np.array([4, 1, 6], np.int32),
+        "c": np.array([2, 2, 9], np.int32),
+    }
+    ra = eng.submit(prompts["a"], max_new_tokens=6)
+    eng.step()  # a resident (admission prefill + one decode: 2 tokens out)
+    rb = eng.submit(prompts["b"], max_new_tokens=2)
+    rc = eng.submit(prompts["c"], max_new_tokens=2)
+    assert eng.evict(ra)
+    assert [r.rid for r in eng.scheduler.readmit] == [ra]
+    eng.step()
+    resident = [r.rid for r in eng.scheduler.active.values()]
+    assert resident == [ra], (
+        f"evicted request lost its turn to a new arrival: {resident}"
+    )
+    out = eng.drain()
+    for rid, key, n in ((ra, "a", 6), (rb, "b", 2), (rc, "c", 2)):
+        ref = np.asarray(generate(
+            params, cfg, jnp.asarray(prompts[key][None]), scfg=scfg,
+            max_new_tokens=n,
+        ))[0]
+        assert [int(t) for t in out[rid]] == [int(t) for t in ref[:n]], key
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_drain_budget_raises_with_partial_results(paged):
+    """drain(max_steps) out of budget raises DrainExhausted carrying the
+    partial rid -> tokens map and active rids; the engine stays
+    consistent, so a follow-up drain finishes the work."""
+    if paged:
+        cfg, params, _ = serve_parity.setup("hyena-153m")
+        eng = PagedServeEngine(params, cfg, serve_parity.SCFG, PCFG)
+    else:
+        cfg, params = setup("hyena-153m")
+        eng = ServeEngine(params, cfg, SCFG)
+    prompt = np.array([3, 5, 7, 2], np.int32)
+    rid = eng.submit(prompt, max_new_tokens=4)
+    with pytest.raises(DrainExhausted) as ei:
+        eng.drain(max_steps=1)
+    err = ei.value
+    assert err.max_steps == 1 and err.active == (rid,)
+    assert rid in err.partial and len(err.partial[rid]) < 4
+    assert "still active" in str(err)
+    out = eng.drain()  # resumes exactly where the budget cut off
+    ref = np.asarray(generate(
+        params, cfg, jnp.asarray(prompt[None]), scfg=serve_parity.SCFG,
+        max_new_tokens=4,
+    ))[0]
+    assert [int(t) for t in out[rid]] == [int(t) for t in ref]
+
+
+def test_cow_copies_shared_block_before_write():
+    """_ensure_writable on a block whose refcount > 1 allocates a private
+    copy, moves the slot's table entry, and preserves contents byte-for-
+    byte — the safety net partial-page forks would rely on."""
+    cfg, params, _ = serve_parity.setup("hyena-153m")
+    eng = PagedServeEngine(params, cfg, serve_parity.SCFG, PCFG)
+    b = eng.alloc.alloc()
+    eng.alloc.incref(b)  # simulate a second owner (radix node / fork)
+    marked = []
+    for j, i in enumerate(eng.spec.paged_idx):
+        s = eng.spec.slot_axes[i]
+        idx = (slice(None),) * s + (b,)
+        eng._phys[j] = eng._phys[j].at[idx].set(1.5)
+        marked.append((j, s))
+    eng._table[0, 0] = b
+    assert eng._ensure_writable(0, 0, 1)
+    nb = int(eng._table[0, 0])
+    assert nb != b and nb != 0
+    assert int(eng.alloc.ref[b]) == 1 and int(eng.alloc.ref[nb]) == 1
+    for j, s in marked:
+        src = np.asarray(jnp.take(eng._phys[j], b, axis=s), np.float32)
+        dst = np.asarray(jnp.take(eng._phys[j], nb, axis=s), np.float32)
+        np.testing.assert_array_equal(dst, src)
+        assert float(np.abs(dst).sum()) > 0.0
+
+
+def test_block_allocator_unit():
+    alloc = BlockAllocator(4)
+    assert alloc.n_free == 3  # block 0 is the reserved trash block
+    a, b, c = alloc.alloc(), alloc.alloc(), alloc.alloc()
+    assert (a, b, c) == (1, 2, 3) and alloc.alloc() is None
+    alloc.incref(b)
+    assert not alloc.decref(b) and alloc.n_free == 0
+    assert alloc.decref(b) and alloc.n_free == 1
+    assert alloc.alloc() == b  # freed block recycles
+    with pytest.raises(ValueError):
+        BlockAllocator(1)
+
+
+def test_slo_queue_ordering_unit():
+    """Admission order: readmits first, then priority (higher wins), then
+    deadline (earlier wins), then arrival order."""
+    q = SLOQueue()
+    q.push(0, priority=0)
+    q.push(1, priority=2)
+    q.push(2, priority=2, deadline=5)
+    q.push(3, priority=2, deadline=3)
+    q.push(4, priority=0)
+    assert q.peek() == (3, False) and q.peek_priority() == 2
+    q.push_readmit(9)
+    assert q.peek() == (9, True)
+    assert q.peek_priority() == 2  # readmits never trigger preemption
+    assert list(q.rids())[0] == 9
+    assert [q.pop() for _ in range(len(q))] == [9, 3, 2, 1, 0, 4]
+    q.push(5, priority=1)
+    q.push(6, priority=1)
+    assert q.remove(5) and not q.remove(5)
+    assert q.pop() == 6 and q.pop() is None
+
+
+def test_radix_prefix_cache_unit():
+    alloc = BlockAllocator(8)
+    radix = RadixPrefixCache(2, alloc)
+    a, b = alloc.alloc(), alloc.alloc()
+    with pytest.raises(ValueError, match="page-aligned"):
+        radix.insert((1, 2, 3), [a, b], ["snap"])
+    # the engine inserts at every page boundary as prefill advances, so
+    # each node carries the snapshot taken when it was the frontier
+    assert radix.insert((1, 2), [a], ["snap1"])
+    assert radix.insert((1, 2, 3, 4), [a, b], ["snap2"])
+    assert radix.n_nodes == 2
+    assert int(alloc.ref[a]) == 2 and int(alloc.ref[b]) == 2
+    # longest whole-page match, capped at len - 1 (a token must remain)
+    depth, blocks, snap = radix.match((1, 2, 3, 4, 5))
+    assert (depth, blocks, snap) == (4, [a, b], ["snap2"])
+    assert radix.match((1, 2, 3, 4))[:1] == (2,)  # cap: limit = 3
+    assert radix.match((9, 9, 9))[0] == 0
+    # the donor finished: it drops its own refs, the tree keeps the blocks
+    alloc.decref(a), alloc.decref(b)
+    assert radix.evict_lru(1) == [b]  # leaf only; ref hit zero
+    assert radix.n_nodes == 1 and alloc.n_free == 6
+    assert radix.match((1, 2, 3, 4, 5))[:2] == (2, [a])
+    assert radix.flush() == [a]
+    assert radix.n_nodes == 0 and alloc.n_free == 7
+
+
+def test_paged_submit_validation():
+    cfg, params, _ = serve_parity.setup("hyena-153m")
+    eng = PagedServeEngine(
+        params, cfg, serve_parity.SCFG,
+        PagedConfig(page_size=4, n_blocks=3),  # 2 usable = 8 tokens
+    )
+    with pytest.raises(ValueError, match="blocks"):
+        eng.submit(np.arange(8), max_new_tokens=4)
+    with pytest.raises(ValueError, match="empty"):
+        eng.submit(np.array([], np.int32), max_new_tokens=1)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(np.arange(MAX_LEN), max_new_tokens=1)
+    eng.submit(np.arange(4), max_new_tokens=4)  # exactly 2 blocks: fits
+    eng.drain()
