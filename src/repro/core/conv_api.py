@@ -172,27 +172,40 @@ def _toeplitz(u, h, skip=None, gate=None):
     return kops.toeplitz_conv(u, h, skip, gate)
 
 
-def _fft_sp(u, h, skip=None):
-    # Sequence-parallel (context-parallel) FFT conv: L sharded over the
-    # 'model' axis, two all-to-alls instead of an L-sized all-gather.
-    # Degrades to the local FFT when there is no ambient mesh, no >1 model
-    # axis, or L does not divide it — so the backend is safe to select
-    # unconditionally (the parity sweep runs it on one device).  The gate
-    # is NOT fused (supports_gate=False): ConvBackend.__call__ applies the
-    # unfused two-pass fallback, keeping the shard_map body gate-free.
+_FFT_SP_WARNED = False
+
+
+def _fft_sp(u, h, skip=None, gate=None):
+    # Sequence-parallel (context-parallel) FFT conv: L sharded over the cp
+    # axis ('model' unless an ExecutionContext cp_axis scope names another),
+    # two all-to-alls instead of an L-sized all-gather.  Non-divisible L is
+    # padded to the next multiple inside sp_fft_causal_conv and the output
+    # truncated (exact by causality) — it must NOT fall back to a
+    # single-device full-L FFT, which is precisely the OOM this backend
+    # exists to prevent.  Off-mesh (no ambient mesh / 1-way axis) it
+    # degrades to the local FFT with a one-time warning, so the parity
+    # sweep can still run it on one device.  Gate+skip are fused into the
+    # post-conv elementwise inside the shard_map body (supports_gate=True).
     from repro.core.fftconv import fft_causal_conv
-    from repro.distributed.ctx import current_mesh
+    from repro.distributed.ctx import current_cp_axis, current_mesh
     from repro.distributed.spconv import sp_fft_causal_conv
 
     mesh = current_mesh()
-    L = u.shape[1]
-    if (
-        mesh is None
-        or mesh.shape.get("model", 1) <= 1
-        or L % mesh.shape["model"] != 0
-    ):
-        return fft_causal_conv(u, h, skip)
-    return sp_fft_causal_conv(u, h, skip, mesh, axis="model")
+    axis = current_cp_axis() or "model"
+    if mesh is None or mesh.shape.get(axis, 1) <= 1:
+        global _FFT_SP_WARNED
+        if not _FFT_SP_WARNED:
+            _FFT_SP_WARNED = True
+            import warnings
+
+            warnings.warn(
+                "conv backend 'fft_sp' selected without a sequence-parallel "
+                f"mesh axis '{axis}' — running the single-device local FFT "
+                "instead (full L per chip).",
+                stacklevel=2,
+            )
+        return fft_causal_conv(u, h, skip, gate)
+    return sp_fft_causal_conv(u, h, skip, mesh, axis=axis, gate=gate)
 
 
 register_conv_backend(ConvBackend(
@@ -228,8 +241,11 @@ register_conv_backend(ConvBackend(
 ))
 register_conv_backend(ConvBackend(
     name="fft_sp", tag="seqpar_fft", fn=_fft_sp, mesh_aware=True,
+    supports_gate=True,
     description="sequence-parallel Cooley-Tukey FFT conv (context "
-    "parallelism for 500K-token prefill): L sharded over 'model', two "
-    "all-to-alls instead of an L-sized all-gather; local-FFT fallback "
-    "off-mesh; gate via the registry's unfused two-pass fallback.",
+    "parallelism for 500K-token prefill AND training — differentiable via "
+    "a custom VJP with the same two-all-to-all comm footprint): L sharded "
+    "over the cp axis, padded to the next divisible length when needed; "
+    "gate+skip fused in the shard_map epilogue; local-FFT fallback "
+    "(warn-once) only when no mesh axis is available.",
 ))

@@ -32,6 +32,24 @@ def use_mesh(mesh: Optional[Mesh]):
         _state.mesh = prev
 
 
+def current_cp_axis() -> Optional[str]:
+    """Mesh axis the *sequence* dim is sharded over for context-parallel
+    training, or None.  Set by ``ExecutionContext.scope()`` so registry
+    backends (whose ``fn(u, h, skip, gate)`` signature carries no context)
+    can resolve which axis their collectives run over."""
+    return getattr(_state, "cp_axis", None)
+
+
+@contextlib.contextmanager
+def use_cp_axis(axis: Optional[str]):
+    prev = current_cp_axis()
+    _state.cp_axis = axis
+    try:
+        yield axis
+    finally:
+        _state.cp_axis = prev
+
+
 def _expand_alias(name: str, mesh: Mesh):
     """'data' is an alias for all data-parallel axes — on the multi-pod mesh
     that's ('pod', 'data') so batch shards over pods too."""

@@ -65,6 +65,13 @@ class ExecutionContext(ApplyContext):
     # sequence-parallel prefill threshold: None = auto (SP_TOKENS_PER_CHIP
     # per chip on the model axis), 0 = never route, else an explicit L
     sp_min_len: Optional[int] = None
+    # context-parallel training: mesh axis the sequence dim of the batch
+    # (and the residual stream) is sharded over.  None = CP off.  When set,
+    # data_sharding shards dim 1 of (B, L) inputs over this axis, Hyena
+    # convs route through the differentiable fft_sp backend, attention
+    # mixers run the ring/masked-allgather path, and make_train_step's
+    # halo exchange handles shifted-by-one targets (DESIGN.md §12).
+    cp_axis: Optional[str] = None
 
     # ------------------------------------------------------------ precision
     def cast_compute(self, tree):
@@ -78,13 +85,17 @@ class ExecutionContext(ApplyContext):
 
     # ---------------------------------------------------------- mesh scope
     def scope(self):
-        """Context manager making ``self.mesh`` the ambient mesh (no-op
-        without one) — host-side entry point for engines and steps."""
+        """Context manager making ``self.mesh`` the ambient mesh and
+        ``self.cp_axis`` the ambient cp axis (no-op without either) —
+        host-side entry point for engines and steps."""
         from repro.distributed import ctx as dctx
 
-        if self.mesh is None:
-            return contextlib.nullcontext()
-        return dctx.use_mesh(self.mesh)
+        stack = contextlib.ExitStack()
+        if self.mesh is not None:
+            stack.enter_context(dctx.use_mesh(self.mesh))
+        if self.cp_axis is not None:
+            stack.enter_context(dctx.use_cp_axis(self.cp_axis))
+        return stack
 
     # ---------------------------------------------------- long-prompt conv
     def sp_threshold(self) -> Optional[int]:
@@ -110,6 +121,13 @@ class ExecutionContext(ApplyContext):
         return SP_TOKENS_PER_CHIP * P
 
     def conv_backend_for(self, L: int) -> Optional[str]:
+        # context-parallel training: the sequence dim is sharded over
+        # cp_axis, so the conv MUST run the sequence-parallel backend —
+        # any local-FFT backend would all-gather L onto every chip
+        if self.cp_axis is not None:
+            mesh = _mesh_or_ambient(self.mesh)
+            if mesh is not None and mesh.shape.get(self.cp_axis, 1) > 1:
+                return "fft_sp"
         # an *explicitly configured* backend always wins unless the caller
         # also opted into routing by setting sp_min_len — auto-routing only
         # replaces the registry default, never a user/env selection
@@ -117,9 +135,9 @@ class ExecutionContext(ApplyContext):
             return self.conv_backend
         thresh = self.sp_threshold()
         if thresh is not None and L >= thresh:
-            mesh = _mesh_or_ambient(self.mesh)
-            if L % mesh.shape["model"] == 0:  # spconv shards L over 'model'
-                return "fft_sp"
+            # non-divisible L pads to the next multiple inside spconv now;
+            # no divisibility gate here anymore
+            return "fft_sp"
         return self.conv_backend
 
     # ------------------------------------------------- rule-driven sharding
@@ -168,28 +186,24 @@ class ExecutionContext(ApplyContext):
             cfg, caches, self.mesh, fsdp=self.fsdp, data_axes=self.data_axes
         )
 
-    def data_sharding(self, ndim: int, dim0: int):
+    def data_sharding(self, ndim: int, dim0: int, seq_len: Optional[int] = None):
         """Batch sharding for one input leaf: dim 0 over the data axes when
-        divisible (the 'data' alias expands over pods), else replicated."""
+        divisible (the 'data' alias expands over pods), else replicated.
+        Under ``cp_axis``, dim 1 (the sequence) additionally shards over the
+        cp axis when ``seq_len`` is given and divisible — the entry point of
+        context-parallel training: tokens arrive already sequence-sharded
+        and no full-L array ever materializes per chip."""
         if self.mesh is None:
             return None
-        import numpy as np
-        from jax.sharding import NamedSharding, PartitionSpec as P
+        from jax.sharding import NamedSharding
 
-        mesh = self.mesh
-        batch_axes = tuple(
-            a for a in ("pod", *self.data_axes) if a in mesh.shape
+        from repro.distributed.sharding import batch_spec
+
+        spec = batch_spec(
+            self.mesh, ndim, dim0, seq_len,
+            data_axes=self.data_axes, cp_axis=self.cp_axis,
         )
-        size = int(np.prod([mesh.shape[a] for a in batch_axes]))
-        if batch_axes and dim0 % size == 0:
-            return NamedSharding(
-                mesh, P(batch_axes, *([None] * (ndim - 1)))
-            )
-        slim = tuple(a for a in self.data_axes if a in mesh.shape)
-        ssize = int(np.prod([mesh.shape[a] for a in slim])) if slim else 0
-        if slim and ssize and dim0 % ssize == 0:
-            return NamedSharding(mesh, P(slim, *([None] * (ndim - 1))))
-        return NamedSharding(mesh, P())
+        return NamedSharding(self.mesh, spec)
 
     def place(self, tree, shardings):
         """device_put under this mesh (identity when meshless) — the one

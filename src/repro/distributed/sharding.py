@@ -78,12 +78,18 @@ def resolve_spec(
     fsdp: bool = False,
     data_axes: Tuple[str, ...] = ("data",),
     extra_leading: int = 0,
+    extra_rules: Optional[Dict[str, Sequence[Tuple[str, ...]]]] = None,
 ) -> P:
     """PartitionSpec for one parameter. ``extra_leading`` accounts for
-    stacked-layer leading dims added by scan-style init (replicated)."""
+    stacked-layer leading dims added by scan-style init (replicated).
+    ``extra_rules`` overlays caller-scoped logical names (e.g. the
+    context-parallel ``cp_seq`` rule, whose mesh axis is an
+    ``ExecutionContext`` knob rather than a global)."""
     if axes is None:
         return P()
     rules = dict(TP_RULES)
+    if extra_rules:
+        rules.update(extra_rules)
     if fsdp:
         for name in FSDP_EMBED:
             rules[name] = [tuple(a for a in data_axes if a in mesh.shape)]
@@ -158,6 +164,37 @@ def _is_axes_leaf(a) -> bool:
     )
 
 
+def batch_spec(
+    mesh: Mesh,
+    ndim: int,
+    dim0: int,
+    seq_len: Optional[int] = None,
+    *,
+    data_axes: Tuple[str, ...] = ("data",),
+    cp_axis: Optional[str] = None,
+) -> P:
+    """PartitionSpec for one *input* leaf, through the same rule engine as
+    state trees: dim 0 resolves the ``batch`` rule (all data axes, then the
+    non-pod subset, first-divides-wins), and — under context parallelism —
+    dim 1 resolves ``cp_seq`` against the context's cp axis.  Non-divisible
+    dims degrade to replicated, never error."""
+    full = tuple(a for a in ("pod", *data_axes) if a in mesh.shape)
+    slim = tuple(a for a in data_axes if a in mesh.shape)
+    rules: Dict[str, Sequence[Tuple[str, ...]]] = {
+        "batch": [c for c in (full, slim) if c],
+        "cp_seq": [(cp_axis,)] if cp_axis and cp_axis in mesh.shape else [],
+    }
+    axes: list = ["batch"] + [None] * (ndim - 1)
+    shape: list = [dim0] + [0] * (ndim - 1)
+    if cp_axis is not None and ndim >= 2 and seq_len is not None:
+        axes[1] = "cp_seq"
+        shape[1] = seq_len
+    return resolve_spec(
+        tuple(axes), tuple(shape), mesh, data_axes=data_axes,
+        extra_rules=rules,
+    )
+
+
 def tree_shardings(
     axes_tree: Any,
     values_tree: Any,
@@ -165,6 +202,7 @@ def tree_shardings(
     *,
     fsdp: bool = False,
     data_axes: Tuple[str, ...] = ("data",),
+    extra_rules: Optional[Dict[str, Sequence[Tuple[str, ...]]]] = None,
 ) -> Any:
     """NamedShardings for an arbitrary state tree.
 
@@ -185,7 +223,7 @@ def tree_shardings(
             extra = val.ndim - len(ax)
             spec = resolve_spec(
                 ax, val.shape, mesh, fsdp=fsdp, data_axes=data_axes,
-                extra_leading=max(extra, 0),
+                extra_leading=max(extra, 0), extra_rules=extra_rules,
             )
             return NamedSharding(mesh, spec)
         if isinstance(ax, dict) and isinstance(val, dict):

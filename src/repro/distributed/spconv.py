@@ -12,8 +12,30 @@ DFT *across* shards — a small dense matmul over the mesh axis implemented
 with one all-to-all + local contraction.  Total comm: 2 all-to-alls of the
 activation instead of an L-sized all-gather — P× less memory traffic.
 
-Implemented with shard_map over one mesh axis; validated in tests against
-the single-device fft_causal_conv on 8 host devices.
+The same machinery is **differentiable**: :func:`sp_fft_causal_conv`
+carries a ``custom_vjp`` (DESIGN.md §12).  The transpose of a causal conv
+is an *anticausal correlation* — ``du_t = Σ_{s≥t} h_{s-t} dy_s`` — which in
+the frequency domain is multiplication by the **conjugated** filter
+spectrum (time-reversed taps).  The backward pass therefore reuses the
+identical two-all-to-all distributed FFT pipeline:
+
+    du = IDFT( DFT(dy) · conj(H) )          (same comm footprint as fwd)
+    dh = IDFT( Σ_b DFT(dy_b) · conj(DFT(u_b)) )   (taps grad, L-sharded)
+
+with every spectrum/inverse built from :func:`_dist_spectrum` /
+:func:`_dist_inverse` — the decomposed halves of the forward body.
+
+Non-divisible lengths are padded to the next multiple of the axis size and
+the output truncated: causality makes the truncation exact (outputs at
+``t < L`` never see the zero tail, and the padded taps are zero).
+
+The Hyena output gate is fused into the post-conv elementwise epilogue
+inside the shard_map body (``supports_gate``), bit-identical to the
+registry's unfused two-pass fallback.
+
+Implemented with shard_map over one mesh axis (batch stays sharded over the
+data/pod axes); validated in tests against the single-device
+fft_causal_conv — values and ``jax.grad`` — on 8 host devices.
 """
 from __future__ import annotations
 
@@ -22,45 +44,52 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-
-from repro.core.fftconv import fft_causal_conv
+from jax.sharding import Mesh, PartitionSpec as P
 
 
-def _sp_conv_body(u_blk, h_blk, skip, *, axis: str, L: int, D: int):
-    """shard_map body. u_blk: (B, L/P, D) contiguous block of the sequence;
-    h_blk: (D, L/P) block of taps.  Strategy: all-gather is avoided for the
-    *output*; we compute Y = irfft(rfft(u)·rfft(h)) with the FFT distributed
-    by re-layout:  contiguous blocks → decimated (stride-P) layout is an
-    all-to-all; local FFTs of length N/P; cross-shard P-point DFT via
-    ppermute-accumulated matmul (P is small: the mesh axis).
-    """
+def _axis_env(axis: str):
     # jax.lax.axis_size is new-API only; psum(1) is the portable spelling
     P_sz = jax.lax.psum(1, axis)
     idx = jax.lax.axis_index(axis)
-    B = u_blk.shape[0]
-    Lp = u_blk.shape[1]
-    N = 2 * L  # zero-padded FFT length
-    Mloc = N // P_sz  # local FFT length
+    return P_sz, idx
 
-    # ---- step 1: re-layout contiguous -> decimated via all_to_all.
-    # Build the local contribution to every shard's decimated stream:
-    # global index n = blk_start + j ; decimated stream r owns n ≡ r (mod P).
-    # Pad the local block to its slice of the length-N stream first.
+
+# --------------------------------------------------- distributed transforms
+#
+# The forward body used to be one monolith; it is now three reusable
+# pieces so the backward pass can compose the same collectives:
+#
+#   _dist_spectrum : contiguous time block -> spectrum block   (2 collectives)
+#   _taps_spectrum : L-sharded taps -> full filter spectrum block
+#   _dist_inverse  : spectrum block -> contiguous time block   (2 collectives)
+
+def _dist_spectrum(x_blk: jax.Array, *, axis: str, L: int) -> jax.Array:
+    """(B, L/P, D) contiguous block of a length-L signal (zero-padded to
+    N = 2L) -> this shard's spectrum block (B, M, D) at frequencies
+    ``k = idx·M + k2`` (M = N/P).
+
+    Strategy: contiguous blocks → decimated (stride-P) layout is an
+    all-to-all (spelled psum_scatter over a masked stack); local FFTs of
+    length N/P; twiddle; cross-shard P-point DFT via one all_to_all +
+    local sum.
+    """
+    P_sz, idx = _axis_env(axis)
+    B, Lp, D = x_blk.shape
+    N = 2 * L
+    Mloc = N // P_sz  # local FFT length
+    x_blk = x_blk.astype(jnp.float32)
+
+    # ---- re-layout contiguous -> decimated.  Global index n = blk_start+j;
+    # decimated stream r owns n ≡ r (mod P); zero pad occupies [L, 2L).
     blk_start = idx * Lp
-    # local padded stream chunk: positions [idx*N/P, (idx+1)*N/P) of pad(u)
-    # Our block is positions [idx*Lp, idx*Lp + Lp) of the *unpadded* u; the
-    # zero pad occupies [L, 2L). Re-layout directly from (B, Lp, D):
-    # decimated row r, slot m corresponds to n = m*P + r.
     m = jnp.arange(Mloc)
-    # for each target shard r: which local j (if any) maps to (m, r)
-    # n = m*P_sz + r ; local j = n - blk_start in [0, Lp)
+
     def gather_for_r(r):
         n = m * P_sz + r
         j = n - blk_start
         ok = (j >= 0) & (j < Lp) & (n < L)
         jc = jnp.clip(j, 0, Lp - 1)
-        vals = u_blk[:, jc, :]  # (B, Mloc, D)
+        vals = x_blk[:, jc, :]  # (B, Mloc, D)
         return jnp.where(ok[None, :, None], vals, 0.0)
 
     per_r = jnp.stack([gather_for_r(r) for r in range(P_sz)], axis=0)
@@ -68,40 +97,52 @@ def _sp_conv_body(u_blk, h_blk, skip, *, axis: str, L: int, D: int):
     dec = jax.lax.psum_scatter(per_r, axis, scatter_dimension=0, tiled=False)
     # dec: (B, Mloc, D) — this shard now owns decimated stream r = idx
 
-    # ---- step 2: local FFT of the decimated stream + twiddle
+    # ---- local FFT of the decimated stream + twiddle
     Dec = jnp.fft.fft(dec.astype(jnp.complex64), axis=1)  # (B, Mloc, D), k2
     k2 = jnp.arange(Mloc)
     tw = jnp.exp(-2j * jnp.pi * (idx * k2) / N).astype(jnp.complex64)
     Dec = Dec * tw[None, :, None]
 
-    # ---- step 3: P-point DFT across shards: X_k1[k2] =
-    # Σ_r W_P^{r·k1} Dec_r[k2]; each shard ends owning spectrum block
-    # k1 = idx.  This shard (owner of Dec_r, r = idx) sends its rotated
-    # contribution to every k1 via one all_to_all, then sums locally.
+    # ---- P-point DFT across shards: X_k1[k2] = Σ_r W_P^{r·k1} Dec_r[k2];
+    # this shard (owner of Dec_r, r = idx) sends its rotated contribution
+    # to every k1 via one all_to_all, then sums locally.
     sendme = jnp.stack(
         [jnp.exp(-2j * jnp.pi * (idx * k1) / P_sz) * Dec for k1 in range(P_sz)],
         axis=0,
     )  # (P, B, Mloc, D) — block k1 for each destination
     recv = jax.lax.all_to_all(sendme, axis, split_axis=0, concat_axis=0,
                               tiled=False)
-    X = jnp.sum(recv, axis=0)  # (B, Mloc, D): spectrum block k1 = idx
+    return jnp.sum(recv, axis=0)  # (B, Mloc, D): spectrum block k1 = idx
 
-    # ---- step 4: multiply by the filter spectrum block (computed the same
-    # way for h — but h is small enough per-channel: gather taps fully).
+
+def _taps_spectrum(h_blk: jax.Array, *, axis: str, L: int) -> jax.Array:
+    """(D, L/P) taps block -> filter spectrum block (M, D) at this shard's
+    frequencies.  Taps are small per channel (D·L, no batch dim), so one
+    all_gather is cheap relative to the activation all-to-alls."""
+    P_sz, idx = _axis_env(axis)
+    N = 2 * L
+    Mloc = N // P_sz
     h_full = jax.lax.all_gather(h_blk, axis, axis=1, tiled=True)  # (D, L)
     H = jnp.fft.fft(
         jnp.pad(h_full.astype(jnp.float32), ((0, 0), (0, N - L))), axis=1
     ).astype(jnp.complex64)  # (D, N)
     kglob = idx * Mloc + jnp.arange(Mloc)
-    Hblk = H[:, kglob].T  # (Mloc, D)
-    Y = X * Hblk[None, :, :]
+    return H[:, kglob].T  # (Mloc, D)
 
-    # ---- step 5: inverse transform via conj-FFT: ifft(Y) =
-    # conj(fft(conj(Y)))/N.  Input layout is contiguous spectrum blocks
-    # (k = idx·M + k2), so use decimation-in-frequency:
-    #   z[P·m + s] = Σ_{k2} W_M^{k2 m} [ W_N^{k2 s} Σ_{k1} c_{k1}[k2] W_P^{k1 s} ]
-    # i.e. cross-shard P-point DFT FIRST, then twiddle, then local FFT.
-    Yc = jnp.conj(Y)
+
+def _dist_inverse(spec_blk: jax.Array, *, axis: str, L: int, Lp: int) -> jax.Array:
+    """Spectrum block (B, M, D) (k = idx·M + k2) -> contiguous real time
+    block (B, Lp, D) in fp32, truncated to the first L global positions.
+
+    ifft via conj-FFT: ifft(Y) = conj(fft(conj(Y)))/N.  Input layout is
+    contiguous spectrum blocks, so decimation-in-frequency: cross-shard
+    P-point DFT FIRST, then twiddle, then local FFT, then one relayout
+    back to contiguous time blocks.
+    """
+    P_sz, idx = _axis_env(axis)
+    B, Mloc, D = spec_blk.shape
+    N = 2 * L
+    Yc = jnp.conj(spec_blk)
     send2 = jnp.stack(
         [jnp.exp(-2j * jnp.pi * (idx * s) / P_sz) * Yc for s in range(P_sz)],
         axis=0,
@@ -112,30 +153,223 @@ def _sp_conv_body(u_blk, h_blk, skip, *, axis: str, L: int, D: int):
     k2v = jnp.arange(Mloc)
     d = d * jnp.exp(-2j * jnp.pi * (k2v * idx) / N).astype(jnp.complex64)[None, :, None]
     zdec = jnp.fft.fft(d, axis=1)  # entries m: conj(y)[P·m + idx]·N
-    y_time = jnp.conj(zdec) / N  # y at positions n ≡ idx (mod P) — re-layout
-    # back to contiguous blocks with one more scatter.
+    y_time = jnp.conj(zdec).real / N  # y at positions n ≡ idx (mod P)
+    # re-layout decimated -> contiguous blocks with one more scatter.
     m2 = jnp.arange(Mloc)
     n_pos = m2 * P_sz + idx
-    def slice_for_owner(o):
-        lo = o * Lp
-        ok = (n_pos >= lo) & (n_pos < lo + Lp) & (n_pos < L)
-        return jnp.where(ok[None, :, None], y_time.real, 0.0), ok
-
     outs = []
     for o in range(P_sz):
-        v, ok = slice_for_owner(o)
-        # scatter into the owner's local (B, Lp, D) frame
-        j = jnp.clip(n_pos - o * Lp, 0, Lp - 1)
-        frame = jnp.zeros((u_blk.shape[0], Lp, u_blk.shape[2]), jnp.float32)
-        frame = frame.at[:, j, :].add(jnp.where(ok[None, :, None], v, 0.0))
+        lo = o * Lp
+        ok = (n_pos >= lo) & (n_pos < lo + Lp) & (n_pos < L)
+        j = jnp.clip(n_pos - lo, 0, Lp - 1)
+        frame = jnp.zeros((B, Lp, D), jnp.float32)
+        frame = frame.at[:, j, :].add(jnp.where(ok[None, :, None], y_time, 0.0))
         outs.append(frame)
     sendback = jnp.stack(outs, axis=0)
-    y_blk = jax.lax.psum_scatter(sendback, axis, scatter_dimension=0,
-                                 tiled=False)
-    if skip is not None:
-        y_blk = y_blk + u_blk.astype(jnp.float32) * skip[None, None, :]
-    return y_blk.astype(u_blk.dtype)
+    return jax.lax.psum_scatter(sendback, axis, scatter_dimension=0,
+                                tiled=False)
 
+
+# ------------------------------------------------------------------ bodies
+
+def _fwd_body(u_blk, h_blk, skip, gate_blk, *, axis: str, L: int,
+              want_core: bool):
+    """shard_map forward body.  u_blk (B, L/P, D); h_blk (D, L/P); skip
+    (D,)|None replicated; gate_blk (B, L/P, D)|None.  The gate+skip
+    epilogue mirrors the registry's unfused fallback expression exactly —
+    ``(gate * core.astype(gate.dtype)).astype(u.dtype)`` — so fusing it is
+    bit-identical (DESIGN.md §7)."""
+    B, Lp, D = u_blk.shape
+    X = _dist_spectrum(u_blk, axis=axis, L=L)
+    Hblk = _taps_spectrum(h_blk, axis=axis, L=L)
+    y = _dist_inverse(X * Hblk[None], axis=axis, L=L, Lp=Lp)
+    if skip is not None:
+        y = y + u_blk.astype(jnp.float32) * skip[None, None, :]
+    core = y.astype(u_blk.dtype)
+    if gate_blk is None:
+        return core
+    out = (gate_blk * core.astype(gate_blk.dtype)).astype(u_blk.dtype)
+    return (out, core) if want_core else out
+
+
+def _bwd_body(dy_blk, u_blk, h_blk, skip, gate_blk, core_blk, *,
+              axis: str, L: int, data_axes):
+    """shard_map backward body — the conv transpose on the same collectives.
+
+    With y = gate ⊙ (conv(u, h) + skip·u):
+      dgate = dy ⊙ core                                  (local elementwise)
+      dy_g  = dy ⊙ gate                                  (local elementwise)
+      du    = corr(dy_g, h) + skip·dy_g  = IDFT(DFT(dy_g)·conj(H))
+      dh    = Σ_b corr(dy_g, u)          = IDFT(Σ_b DFT(dy_g)·conj(DFT(u)))
+      dskip = Σ_{b,t} dy_g ⊙ u                           (psum over axes)
+    Correlations are exact on the N = 2L grid: positive lags [0, L) never
+    wrap (supports < L), matching the truncated forward's adjoint exactly.
+    """
+    B, Lp, D = dy_blk.shape
+    dy = dy_blk.astype(jnp.float32)
+    dgate = None
+    if gate_blk is not None:
+        dgate = (dy * core_blk.astype(jnp.float32)).astype(gate_blk.dtype)
+        dy = dy * gate_blk.astype(jnp.float32)
+    dS = _dist_spectrum(dy, axis=axis, L=L)
+    Hblk = _taps_spectrum(h_blk, axis=axis, L=L)
+    du = _dist_inverse(dS * jnp.conj(Hblk)[None], axis=axis, L=L, Lp=Lp)
+    dskip = None
+    if skip is not None:
+        du = du + dy * skip[None, None, :].astype(jnp.float32)
+        # global sum over batch and time: local reduce + psum over the cp
+        # axis (time shards) and the data axes (batch shards)
+        dskip = jax.lax.psum(
+            jnp.sum(dy * u_blk.astype(jnp.float32), axis=(0, 1)),
+            (axis,) + tuple(data_axes),
+        )
+    U = _dist_spectrum(u_blk, axis=axis, L=L)
+    dh_spec = jnp.sum(dS * jnp.conj(U), axis=0, keepdims=True)  # (1, M, D)
+    dh = _dist_inverse(dh_spec, axis=axis, L=L, Lp=Lp)[0].T  # (D, Lp)
+    if data_axes:  # batch rows live on the data shards: sum their taps grads
+        dh = jax.lax.psum(dh, tuple(data_axes))
+    return (
+        du.astype(u_blk.dtype),
+        dh.astype(h_blk.dtype),
+        dskip,
+        dgate,
+    )
+
+
+# ----------------------------------------------------------- shard_map glue
+
+def _batch_specs(mesh: Mesh, axis: str, B: int):
+    """Batch dim stays sharded over the data/pod axes when divisible (the
+    training layout); otherwise replicated (the original prefill layout)."""
+    data_axes = tuple(
+        a for a in ("pod", "data") if a in mesh.shape and a != axis
+    )
+    data_sz = 1
+    for a in data_axes:
+        data_sz *= mesh.shape[a]
+    if not data_axes or data_sz <= 1 or B % data_sz:
+        return None, ()
+    bspec = data_axes if len(data_axes) > 1 else data_axes[0]
+    return bspec, data_axes
+
+
+def _run_fwd(mesh, axis, u, h, skip, gate, want_core):
+    from repro.distributed.ctx import shard_map
+
+    B, L, D = u.shape
+    bspec, _ = _batch_specs(mesh, axis, B)
+    act = P(bspec, axis, None)
+    args = [u, h]
+    specs = [act, P(None, axis)]
+    if skip is not None:
+        args.append(skip)
+        specs.append(P(None))
+    if gate is not None:
+        args.append(gate)
+        specs.append(act)
+    has_skip, has_gate = skip is not None, gate is not None
+    out_specs = (act, act) if (want_core and has_gate) else act
+
+    def body(*xs):
+        ub, hb = xs[0], xs[1]
+        i = 2
+        sb = gb = None
+        if has_skip:
+            sb = xs[i]
+            i += 1
+        if has_gate:
+            gb = xs[i]
+        return _fwd_body(ub, hb, sb, gb, axis=axis, L=L, want_core=want_core)
+
+    fn = shard_map(
+        body, mesh=mesh, in_specs=tuple(specs), out_specs=out_specs,
+        check=False,  # complex FFT + multi-axis specs trip the vma checker
+    )
+    return fn(*args)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _sp_conv(mesh: Mesh, axis: str, u, h, skip, gate):
+    """Differentiable core (L divisible by the axis size).  The custom_vjp
+    exists because (a) jax cannot transpose the FFT custom-call under
+    shard_map on every backend/version, and (b) the hand-written adjoint
+    keeps the backward comm footprint identical to forward instead of
+    whatever the transpose of psum_scatter-of-masked-stacks lowers to."""
+    return _run_fwd(mesh, axis, u, h, skip, gate, want_core=False)
+
+
+def _sp_conv_fwd(mesh, axis, u, h, skip, gate):
+    if gate is None:
+        out = _run_fwd(mesh, axis, u, h, skip, gate, want_core=False)
+        core = None
+    else:
+        out, core = _run_fwd(mesh, axis, u, h, skip, gate, want_core=True)
+    return out, (u, h, skip, gate, core)
+
+
+def _sp_conv_bwd(mesh, axis, res, dy):
+    from repro.distributed.ctx import shard_map
+
+    u, h, skip, gate, core = res
+    B, L, D = u.shape
+    bspec, data_axes = _batch_specs(mesh, axis, B)
+    act = P(bspec, axis, None)
+    has_skip, has_gate = skip is not None, gate is not None
+
+    args = [dy, u, h]
+    specs = [act, act, P(None, axis)]
+    if has_skip:
+        args.append(skip)
+        specs.append(P(None))
+    if has_gate:
+        args.extend([gate, core])
+        specs.extend([act, act])
+
+    out_specs = [act, P(None, axis)]
+    if has_skip:
+        out_specs.append(P(None))
+    if has_gate:
+        out_specs.append(act)
+
+    def body(*xs):
+        dyb, ub, hb = xs[0], xs[1], xs[2]
+        i = 3
+        sb = gb = cb = None
+        if has_skip:
+            sb = xs[i]
+            i += 1
+        if has_gate:
+            gb, cb = xs[i], xs[i + 1]
+        du, dh, dskip, dgate = _bwd_body(
+            dyb, ub, hb, sb, gb, cb, axis=axis, L=L, data_axes=data_axes
+        )
+        outs = [du, dh]
+        if has_skip:
+            outs.append(dskip)
+        if has_gate:
+            outs.append(dgate)
+        return tuple(outs)
+
+    fn = shard_map(
+        body, mesh=mesh, in_specs=tuple(specs), out_specs=tuple(out_specs),
+        check=False,
+    )
+    outs = list(fn(*args))
+    du, dh = outs[0], outs[1]
+    i = 2
+    dskip = dgate = None
+    if has_skip:
+        dskip = outs[i]
+        i += 1
+    if has_gate:
+        dgate = outs[i]
+    return du, dh, dskip, dgate
+
+
+_sp_conv.defvjp(_sp_conv_fwd, _sp_conv_bwd)
+
+
+# ------------------------------------------------------------------ public
 
 def sp_fft_causal_conv(
     u: jax.Array,  # (B, L, D), L sharded over `axis` in contiguous blocks
@@ -143,17 +377,26 @@ def sp_fft_causal_conv(
     skip: Optional[jax.Array],
     mesh: Mesh,
     axis: str = "model",
+    gate: Optional[jax.Array] = None,  # (B, L, D) fused output gate
 ) -> jax.Array:
-    """Distributed causal conv via two-stage Cooley–Tukey FFT; numerics
-    validated against fft_causal_conv in tests (8 host devices)."""
-    B, L, D = u.shape
-    skip_in = skip if skip is not None else jnp.zeros((D,), jnp.float32)
-    from repro.distributed.ctx import shard_map
+    """Distributed causal conv via two-stage Cooley–Tukey FFT, with a
+    custom VJP so ``jax.grad`` reuses the same collectives (anticausal
+    correlation = conjugated filter spectrum).
 
-    fn = shard_map(
-        lambda ub, hb, s: _sp_conv_body(ub, hb, s, axis=axis, L=L, D=D),
-        mesh=mesh,
-        in_specs=(P(None, axis, None), P(None, axis), P(None)),
-        out_specs=P(None, axis, None),
-    )
-    return fn(u, h, skip_in)
+    ``L`` need not divide the axis size: inputs/taps are zero-padded to the
+    next multiple and the output truncated — exact, because causal outputs
+    at ``t < L`` never see the zero tail (this replaces the old silent
+    full-``L`` single-device fallback, which was the OOM this backend
+    exists to prevent).  Numerics and grads are validated against
+    fft_causal_conv in tests (8 host devices).
+    """
+    B, L, D = u.shape
+    P_sz = mesh.shape[axis]
+    pad = (-L) % P_sz
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        h = jnp.pad(h, ((0, 0), (0, pad)))
+        if gate is not None:
+            gate = jnp.pad(gate, ((0, 0), (0, pad), (0, 0)))
+    out = _sp_conv(mesh, axis, u, h, skip, gate)
+    return out[:, :L] if pad else out

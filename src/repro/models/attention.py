@@ -131,15 +131,168 @@ def chunked_attention(
     return o.astype(q.dtype)
 
 
-def apply_attention(
-    params, cfg: AttentionConfig, x: jax.Array, *, pos_offset: int = 0
+def cp_ring_attention(
+    q: jax.Array,  # (B, L, H, Dh), L sharded over `axis`
+    k: jax.Array,  # (B, L, Hkv, Dh), L sharded over `axis`
+    v: jax.Array,
+    *,
+    mesh,
+    axis: str,
+    window: Optional[int] = None,
+    q_offset: int = 0,
 ) -> jax.Array:
-    """Full-sequence forward (training / prefill). x: (B, L, D)."""
+    """Ring attention over the context-parallel axis: queries AND keys stay
+    sequence-sharded; the KV shard rotates around the ring (one ppermute
+    per step, P steps) while each shard folds the visiting block into its
+    flash-style online-softmax accumulators.  Peak memory O(L/P · L/P) per
+    block pair instead of O(L/P · L) for the allgather path; masks use
+    absolute positions (``idx · L/P + q_offset``), which is how per-shard
+    RoPE/position offsets stay consistent.  Differentiable: the loop is
+    python-unrolled and ppermute transposes to the inverse ring.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.ctx import shard_map
+    from repro.distributed.spconv import _batch_specs
+
+    B, L, H, Dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    P_sz = mesh.shape[axis]
+    Lp = L // P_sz
+    bspec, _ = _batch_specs(mesh, axis, B)
+    qspec = P(bspec, axis, None, None)
+
+    def body(qb, kb, vb):
+        idx = jax.lax.axis_index(axis)
+        Bl = qb.shape[0]
+        qg = (qb.astype(jnp.float32) / math.sqrt(Dh)).reshape(
+            Bl, Lp, Hkv, G, Dh
+        )
+        iq = q_offset + idx * Lp + jnp.arange(Lp)  # absolute query positions
+        m = jnp.full((Bl, Hkv, G, Lp), NEG_INF, jnp.float32)
+        l = jnp.zeros((Bl, Hkv, G, Lp), jnp.float32)
+        acc = jnp.zeros((Bl, Hkv, G, Lp, Dh), jnp.float32)
+        kc, vc = kb, vb
+        perm = [(i, (i + 1) % P_sz) for i in range(P_sz)]
+        for s in range(P_sz):
+            src = (idx - s) % P_sz  # owner of the block visiting this step
+            ik = q_offset + src * Lp + jnp.arange(Lp)
+            sc = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", qg, kc.astype(jnp.float32)
+            )
+            mask = ik[None, :] <= iq[:, None]
+            if window is not None:
+                mask = mask & (ik[None, :] > iq[:, None] - window)
+            sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+            # finite NEG_INF + re-zeroing p under the mask keeps fully
+            # masked (future) blocks NaN-free — same pattern as
+            # chunked_attention
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32)
+            )
+            m = m_new
+            if s < P_sz - 1:
+                kc = jax.lax.ppermute(kc, axis, perm)
+                vc = jax.lax.ppermute(vc, axis, perm)
+        l = jnp.where(l == 0.0, 1.0, l)
+        o = (acc / l[..., None]).transpose(0, 3, 1, 2, 4)
+        return o.reshape(Bl, Lp, H, Dh).astype(qb.dtype)
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(qspec, P(bspec, axis, None, None), P(bspec, axis, None, None)),
+        out_specs=qspec, check=False,
+    )
+    return fn(q, k, v)
+
+
+def cp_allgather_attention(
+    q, k, v, *, mesh, axis: str, window: Optional[int] = None,
+    q_offset: int = 0, chunk_kv: int = 1024,
+) -> jax.Array:
+    """Masked-allgather fallback for the cp path: queries stay sharded, KV
+    all-gathers inside the shard_map body and each shard runs the chunked
+    online-softmax with its absolute query offset.  O(L) KV per chip — use
+    when the ring's P-step latency loses to one fused all-gather (small P,
+    short L)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.ctx import shard_map
+    from repro.distributed.spconv import _batch_specs
+
+    B, L, H, Dh = q.shape
+    P_sz = mesh.shape[axis]
+    Lp = L // P_sz
+    bspec, _ = _batch_specs(mesh, axis, B)
+    qspec = P(bspec, axis, None, None)
+
+    def body(qb, kb, vb):
+        idx = jax.lax.axis_index(axis)
+        kf = jax.lax.all_gather(kb, axis, axis=1, tiled=True)
+        vf = jax.lax.all_gather(vb, axis, axis=1, tiled=True)
+        return chunked_attention(
+            qb, kf, vf, causal=True, window=window,
+            q_offset=q_offset + idx * Lp, chunk_kv=chunk_kv,
+        )
+
+    fn = shard_map(
+        body, mesh=mesh, in_specs=(qspec, qspec, qspec), out_specs=qspec,
+        check=False,
+    )
+    return fn(q, k, v)
+
+
+def apply_attention(
+    params, cfg: AttentionConfig, x: jax.Array, *, pos_offset: int = 0,
+    cp_axis: Optional[str] = None,
+) -> jax.Array:
+    """Full-sequence forward (training / prefill). x: (B, L, D).
+
+    With ``cp_axis`` (context-parallel training) the sequence dim of q AND
+    kv stays sharded and attention runs the ring (or, with
+    ``$REPRO_CP_ATTN=allgather``, the masked-allgather fallback) — no
+    full-L KV ever materializes per chip.
+    """
     B, L, D = x.shape
     H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     q = dense(params["q"], x).reshape(B, L, H, Dh)
     k = dense(params["k"], x).reshape(B, L, Hkv, Dh)
     v = dense(params["v"], x).reshape(B, L, Hkv, Dh)
+    from repro.distributed.ctx import current_mesh
+
+    mesh = current_mesh()
+    use_cp = (
+        cp_axis is not None
+        and mesh is not None
+        and mesh.shape.get(cp_axis, 1) > 1
+        and L % mesh.shape[cp_axis] == 0
+    )
+    if use_cp:
+        # sequence stays sharded on q AND kv; constraints before RoPE for
+        # the same heads-whole layout reason as below (rope splits Dh,
+        # which is unsharded here, so GSPMD's sharded iota is safe)
+        q = shard(q, "data", cp_axis, None, None)
+        k = shard(k, "data", cp_axis, None, None)
+        v = shard(v, "data", cp_axis, None, None)
+        pos = jnp.arange(L) + pos_offset
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        import os
+
+        impl = os.environ.get("REPRO_CP_ATTN", "ring")
+        fn = cp_allgather_attention if impl == "allgather" else cp_ring_attention
+        o = fn(
+            q, k, v, mesh=mesh, axis=cp_axis, window=cfg.window,
+            q_offset=pos_offset,
+        )
+        o = shard(o, "data", cp_axis, None, None)
+        return dense(params["o"], o.reshape(B, L, H * Dh))
     # context parallelism: queries sharded over model axis, KV replicated.
     # The constraints sit BEFORE RoPE on purpose: a model-sharded qkv
     # weight leaves its activation sharded on the flattened (H·Dh) dim,
@@ -276,7 +429,10 @@ class AttentionMixer(TokenMixer):
         return init_attention(key, mc)
 
     def apply(self, params, mc, h, ctx: ApplyContext):
-        return apply_attention(params, mc, h, pos_offset=ctx.pos_offset)
+        return apply_attention(
+            params, mc, h, pos_offset=ctx.pos_offset,
+            cp_axis=getattr(ctx, "cp_axis", None),
+        )
 
     def init_cache(self, mc, batch, max_len, dtype):
         return init_kv_cache(mc, batch, max_len, dtype)

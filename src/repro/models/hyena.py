@@ -49,28 +49,42 @@ def apply_hyena_mixer(
     ctx = ctx or DEFAULT_CONTEXT
     B, L, D = x.shape
     N = cfg.order
+    cp = getattr(ctx, "cp_axis", None)
+    seq_axis = cp or "model"
     z = x @ params["in_proj"]["w"].astype(x.dtype)
     if "b" in params["in_proj"]:
         z = z + params["in_proj"]["b"].astype(x.dtype)
-    z = shard(z, "data", "model", None)  # seq-sharded; short conv halo-exchanges
+    z = shard(z, "data", seq_axis, None)  # seq-sharded; short conv halo-exchanges
     z = short_causal_conv(z, params["short_filter"])
     parts = jnp.split(z, N + 1, axis=-1)
     v, xs = parts[0], parts[1:]
-    # conv layout: channels on model, full sequence (all-to-all, not gather)
-    v = shard(v, "data", None, "model")
-    xs = [shard(xn, "data", None, "model") for xn in xs]
+    if cp is not None:
+        # context parallelism: the sequence dim STAYS sharded through the
+        # sequence-parallel conv — the channel all-to-all layout below
+        # would put the full L on every chip, exactly what cp must avoid
+        v = shard(v, "data", cp, None)
+        xs = [shard(xn, "data", cp, None) for xn in xs]
+    else:
+        # conv layout: channels on model, full sequence (all-to-all, not gather)
+        v = shard(v, "data", None, "model")
+        xs = [shard(xn, "data", None, "model") for xn in xs]
     h = F.evaluate_filters(params["filters"], cfg.filter, L)  # (N, D, L)
     skip = F.filter_skip(params["filters"], cfg.filter)
     # length-aware routing: an ExecutionContext steers long sequences onto
     # the sequence-parallel fft_sp backend past its per-mesh threshold
+    # (and cp training routes there unconditionally)
     backend = get_conv_backend(ctx.conv_backend_for(L))
     backend.validate_len(L)
     for n in range(N):
-        hn = shard(h[n], "model", None)  # depthwise: channel-sharded filter
+        # depthwise: channel-sharded filter in the TP layout; under cp the
+        # taps stay replicated and fft_sp scatters their L dim itself
+        hn = h[n] if cp is not None else shard(h[n], "model", None)
         # gate fused into the conv backend (xs[n] shares v's sharding, so
         # the fused multiply stays collective-free)
         v = backend(v, hn, skip[n], gate=xs[n]).astype(x.dtype)
-        v = shard(v, "data", None, "model")
+        v = shard(v, "data", cp, None) if cp is not None else shard(
+            v, "data", None, "model"
+        )
     y = v @ params["out_proj"]["w"].astype(x.dtype)
     if "b" in params["out_proj"]:
         y = y + params["out_proj"]["b"].astype(x.dtype)

@@ -99,21 +99,26 @@ def forward(
                 ctx=dataclasses.replace(ctx, mesh=None),
                 compute_dtype=compute_dtype,
             )
-    tokens = shard(tokens, "data", None)
+    # the sequence axis of the residual stream: 'model' (Megatron-SP)
+    # unless the context names a dedicated context-parallel axis
+    seq_axis = getattr(ctx, "cp_axis", None) or "model"
+    cp_on = getattr(ctx, "cp_axis", None) is not None
+    # under cp the token batch itself is sequence-sharded end to end
+    tokens = shard(tokens, "data", seq_axis if cp_on else None)
     x = embed(params["embed"], tokens, dtype=compute_dtype)
     if frontend_embeds is not None and cfg.frontend_len:
         P = frontend_embeds.shape[1]
         x = jax.lax.dynamic_update_slice(
             x, frontend_embeds.astype(x.dtype), (0, 0, 0)
         )
-    x = shard(x, "data", None, None)
+    x = shard(x, "data", seq_axis if cp_on else None, None)
     plen = len(cfg.pattern)
 
     def group_body(x, group_params):
-        # residual stream sequence-sharded over 'model' between layers
+        # residual stream sequence-sharded over the seq axis between layers
         # (Megatron-SP): the scan carry (remat save point) is 1/TP the size
         # — required to fit 80-layer remat at 16 rows × 4K tokens per chip.
-        x = shard(x, "data", "model", None)
+        x = shard(x, "data", seq_axis, None)
         aux_sum = jnp.zeros((2,), jnp.float32)
         for p, mixer in enumerate(cfg.pattern):
             x, aux = B.apply_block(group_params[p], cfg, mixer, x, ctx)
@@ -121,7 +126,7 @@ def forward(
                 aux_sum = aux_sum + jnp.stack(
                     [aux["moe_load_balance"], aux["moe_z_loss"]]
                 )
-        x = shard(x, "data", "model", None)
+        x = shard(x, "data", seq_axis, None)
         return x, aux_sum
 
     body = group_body
@@ -159,7 +164,9 @@ def forward(
         logits = x @ params["head"]["w"].astype(x.dtype)
     # sequence-sharded logits: full-vocab rows live on one chip, so the loss
     # never materializes a vocab-sharded softmax nor a full (B, L, V) fp32.
-    logits = shard(logits, "data", "model", None)
+    # (Under cp the loss reductions over the sharded L dim are plain jnp
+    # sums — GSPMD inserts the psum over the cp axis.)
+    logits = shard(logits, "data", seq_axis, None)
     return logits, aux
 
 

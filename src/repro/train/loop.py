@@ -179,8 +179,9 @@ class TrainLoop:
                 continue
             v = jnp.asarray(v)
             if self.ectx.mesh is not None:
+                seq = v.shape[1] if v.ndim >= 2 else None
                 v = jax.device_put(
-                    v, self.ectx.data_sharding(v.ndim, v.shape[0])
+                    v, self.ectx.data_sharding(v.ndim, v.shape[0], seq)
                 )
             out[k] = v
         return out

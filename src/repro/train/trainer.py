@@ -45,6 +45,9 @@ class TrainConfig:
     # int8 error-feedback compression of the gradient all-reduce
     # (None | "int8_ef"); residuals ride in the train state as "cgrad"
     grad_compression: Optional[str] = None
+    # context-parallel training: shard the batch's sequence dim (and the
+    # residual stream) over this mesh axis; None = off.  See DESIGN.md §12.
+    cp_axis: Optional[str] = None
 
     def __post_init__(self):
         if self.grad_compression not in (None, "int8_ef"):
@@ -66,6 +69,7 @@ class TrainConfig:
             mesh=mesh,
             policy=self.policy,
             fsdp=self.fsdp,
+            cp_axis=self.cp_axis,
         )
 
 
@@ -100,13 +104,65 @@ def abstract_train_state(cfg: ModelConfig, tcfg: Optional[TrainConfig] = None):
     return struct, captured["axes"]
 
 
+def cp_shift_targets(tokens, mesh=None, cp_axis: Optional[str] = None,
+                     ignore: int = lm.IGNORE):
+    """Next-token LM targets: ``labels[t] = tokens[t+1]``, last *global*
+    position = ``ignore``.
+
+    Under context parallelism tokens arrive sequence-sharded, so position
+    ``Lp-1`` of shard ``i`` needs position ``0`` of shard ``i+1`` — a
+    one-token halo exchange (``ppermute``) instead of any resharding of
+    the (B, L) tensor.  Without a cp mesh this is the plain shift.
+    """
+    if mesh is None or cp_axis is None or mesh.shape.get(cp_axis, 1) <= 1:
+        return jnp.concatenate(
+            [tokens[:, 1:], jnp.full_like(tokens[:, :1], ignore)], axis=1
+        )
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.ctx import shard_map
+    from repro.distributed.spconv import _batch_specs
+
+    P_sz = mesh.shape[cp_axis]
+    bspec, _ = _batch_specs(mesh, cp_axis, tokens.shape[0])
+
+    def body(tb):
+        idx = jax.lax.axis_index(cp_axis)
+        # halo: every shard receives the NEXT shard's first token column
+        # (the last shard receives shard 0's — masked to `ignore` below)
+        halo = jax.lax.ppermute(
+            tb[:, :1], cp_axis,
+            [((i + 1) % P_sz, i) for i in range(P_sz)],
+        )
+        lab = jnp.concatenate([tb[:, 1:], halo], axis=1)
+        Lp = tb.shape[1]
+        last_global = (jnp.arange(Lp) == Lp - 1)[None, :] & (idx == P_sz - 1)
+        return jnp.where(last_global, jnp.full_like(lab, ignore), lab)
+
+    fn = shard_map(
+        body, mesh=mesh, in_specs=(P(bspec, cp_axis),),
+        out_specs=P(bspec, cp_axis), check=False,
+    )
+    return fn(tokens)
+
+
 def _loss(params, cfg: ModelConfig, tcfg: TrainConfig, ctx: ExecutionContext,
           batch):
     # mixed precision: fp32 master params enter the model policy-cast (one
     # cast at the step top; grads flow back to fp32 through the astype vjp)
     params = ctx.cast_compute(params)
+    labels = batch.get("labels")
+    if labels is None:
+        # batches without pre-shifted labels (long-context smoke/bench):
+        # derive them in-step; crossing shard boundaries costs one token of
+        # halo exchange under cp
+        from repro.distributed.execution import _mesh_or_ambient
+
+        labels = cp_shift_targets(
+            batch["tokens"], _mesh_or_ambient(ctx.mesh), ctx.cp_axis
+        )
     return lm.loss_fn(
-        params, cfg, batch["tokens"], batch["labels"],
+        params, cfg, batch["tokens"], labels,
         batch.get("frontend_embeds"),
         ctx=ctx,
         moe_aux_weight=tcfg.moe_aux_weight,
@@ -128,11 +184,30 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
     if compress:
         from repro.distributed import compression
 
+    def constrain(v):
+        # batch over data; under cp the sequence dim (dim 1) over cp_axis —
+        # tokens/labels never materialize at full L per chip
+        axes = ["data"] + [None] * (v.ndim - 1)
+        if tcfg.cp_axis is not None and v.ndim >= 2:
+            axes[1] = tcfg.cp_axis
+        return shard(v, *axes)
+
     def step(state, batch):
         params = state["params"]
         batch = {k: v for k, v in batch.items() if v is not None}
-        batch = {k: shard(v, *(["data"] + [None] * (v.ndim - 1))) for k, v in batch.items()}
+        batch = {k: constrain(v) for k, v in batch.items()}
         n = tcfg.microbatches
+        if n > 1:
+            bad = {k: v.shape[0] for k, v in batch.items() if v.shape[0] % n}
+            if bad:
+                k, B = next(iter(bad.items()))
+                raise ValueError(
+                    f"make_train_step: microbatches={n} must divide the "
+                    f"global batch size B={B} (leaf '{k}' has shape[0]={B} "
+                    f"on the data axis {'/'.join(ctx.data_axes)}); use a "
+                    f"batch size that is a multiple of {n} or set "
+                    f"microbatches to a divisor of {B}."
+                )
         if n == 1:
             (_, metrics), grads = grad_fn(params, batch)
         else:

@@ -106,13 +106,13 @@ def test_conv_backends_gated_parity_fast(L):
 
 def test_fft_sp_registered_with_contract():
     """The sequence-parallel conv is a first-class registry citizen: mesh
-    aware, unfused-gate fallback (ConvBackend.__call__ applies the two-pass
-    schedule), and — with no ambient mesh — included in every sweep above
-    via its local-FFT fallback."""
+    aware, gate fused inside the shard_map epilogue (bit-identical to the
+    unfused registry fallback — DESIGN.md §7/§12), and — with no ambient
+    mesh — included in every sweep above via its local-FFT fallback."""
     from repro.core.conv_api import get_conv_backend
 
     b = get_conv_backend("fft_sp")
-    assert b.mesh_aware and not b.supports_gate and not b.oracle
+    assert b.mesh_aware and b.supports_gate and not b.oracle
 
 
 def test_fft_sp_sharded_gated_parity_subprocess():

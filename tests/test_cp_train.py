@@ -1,0 +1,444 @@
+"""Context-parallel training tests (DESIGN.md §12).
+
+Multi-device cases run in subprocesses with
+``--xla_force_host_platform_device_count=8`` (same idiom as
+test_distributed.py) so the main process keeps seeing one device.  The
+tolerance story: everything runs the FP32 policy, so cp-vs-single-device
+parity is pinned near machine epsilon — loss to 1e-4, grads to 1e-3
+relative — not the loose envelopes the bf16 mesh tests need.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_subprocess(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert proc.returncode == 0, f"stderr:\n{proc.stderr[-4000:]}"
+    return proc.stdout
+
+
+# ------------------------------------------------ conv VJP grad parity
+
+def test_sp_conv_grad_parity_all_shapes():
+    """sp_fft_causal_conv custom_vjp vs fft_causal_conv under jax.grad:
+    du/dh for divisible L=64 and padded L=60, with and without gate/skip,
+    plus dskip/dgate — the backward's transposed distributed FFT must
+    match the local reference to fp32 noise."""
+    out = run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.distributed.spconv import sp_fft_causal_conv
+        from repro.core.fftconv import fft_causal_conv
+
+        mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+        key = jax.random.PRNGKey(0)
+        B, L, D = 4, 64, 8
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        u = jax.random.normal(k1, (B, L, D), jnp.float32)
+        h = jax.random.normal(k2, (D, L), jnp.float32) * 0.1
+        skip = jax.random.normal(k3, (D,), jnp.float32)
+        gate = jax.random.normal(k4, (B, L, D), jnp.float32)
+        dy = jax.random.normal(k5, (B, L, D), jnp.float32)
+
+        def check(name, a, b, tol=2e-3):
+            d = float(jnp.max(jnp.abs(a - b)))
+            s = float(jnp.max(jnp.abs(b))) + 1e-8
+            assert d / s < tol, f"{name}: rel={d/s:.2e}"
+
+        for Lt in (64, 60):  # 60 exercises the pad-to-divisible path
+            ut, ht, gt, dyt = u[:, :Lt], h[:, :Lt], gate[:, :Lt], dy[:, :Lt]
+            for g in (None, gt):
+                for sk in (None, skip):
+                    lbl = f"L={Lt} gate={g is not None} skip={sk is not None}"
+                    ref_f = lambda uu, hh: fft_causal_conv(uu, hh, sk, g)
+                    sp_f = lambda uu, hh: sp_fft_causal_conv(
+                        uu, hh, sk, mesh, axis="model", gate=g)
+                    check(f"fwd {lbl}", jax.jit(sp_f)(ut, ht), ref_f(ut, ht))
+                    lr = lambda uu, hh: jnp.sum(ref_f(uu, hh) * dyt)
+                    ls = lambda uu, hh: jnp.sum(sp_f(uu, hh) * dyt)
+                    gr = jax.grad(lr, argnums=(0, 1))(ut, ht)
+                    gs = jax.jit(jax.grad(ls, argnums=(0, 1)))(ut, ht)
+                    check(f"du {lbl}", gs[0], gr[0])
+                    check(f"dh {lbl}", gs[1], gr[1])
+        ls = lambda sk, g: jnp.sum(
+            sp_fft_causal_conv(u, h, sk, mesh, axis="model", gate=g) * dy)
+        lr = lambda sk, g: jnp.sum(fft_causal_conv(u, h, sk, g) * dy)
+        gs = jax.jit(jax.grad(ls, argnums=(0, 1)))(skip, gate)
+        gr = jax.grad(lr, argnums=(0, 1))(skip, gate)
+        check("dskip", gs[0], gr[0])
+        check("dgate", gs[1], gr[1])
+        print("CONV-VJP-OK")
+    """)
+    assert "CONV-VJP-OK" in out
+
+
+def test_mesh_conv_backends_grad_parity_vs_local():
+    """Every mesh-aware registry backend (fft, fft_sp) must agree with
+    fft_local under jax.grad — including the gate-fused epilogue (satellite:
+    gate fusion must be bit-compatible in the backward too)."""
+    out = run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.core import conv_api
+        from repro.distributed.ctx import use_mesh
+
+        mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+        key = jax.random.PRNGKey(3)
+        B, L, D = 4, 60, 8   # non-divisible L: fft_sp pads internally
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        u = jax.random.normal(k1, (B, L, D), jnp.float32)
+        h = jax.random.normal(k2, (D, L), jnp.float32) * 0.1
+        skip = jax.random.normal(k3, (D,), jnp.float32)
+        gate = jax.random.normal(k4, (B, L, D), jnp.float32)
+        dy = jax.random.normal(k5, (B, L, D), jnp.float32)
+
+        def grads(backend, g):
+            conv = conv_api.get_conv_backend(backend)
+            f = lambda uu, hh, sk: jnp.sum(conv(uu, hh, sk, gate=g) * dy)
+            with use_mesh(mesh):
+                return jax.jit(jax.grad(f, argnums=(0, 1, 2)))(u, h, skip)
+
+        for g in (None, gate):
+            ref = grads("fft_local", g)
+            for backend in ("fft", "fft_sp"):
+                got = grads(backend, g)
+                for r, o, nm in zip(ref, got, ("du", "dh", "dskip")):
+                    d = float(jnp.max(jnp.abs(r - o)))
+                    s = float(jnp.max(jnp.abs(r))) + 1e-8
+                    assert d / s < 2e-3, (
+                        f"{backend} {nm} gate={g is not None}: {d/s:.2e}")
+        print("BACKENDS-OK")
+    """)
+    assert "BACKENDS-OK" in out
+
+
+# ------------------------------------------------ ring / allgather attn
+
+def test_cp_attention_grad_parity():
+    """Ring and masked-allgather cp attention vs chunked_attention —
+    forward and dq/dk/dv, full-causal and windowed (GQA shapes)."""
+    out = run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.models.attention import (
+            cp_ring_attention, cp_allgather_attention, chunked_attention)
+
+        mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+        key = jax.random.PRNGKey(1)
+        B, L, H, Hkv, Dh = 4, 64, 4, 2, 16
+        kq, kk, kv, kd = jax.random.split(key, 4)
+        q = jax.random.normal(kq, (B, L, H, Dh), jnp.float32)
+        k = jax.random.normal(kk, (B, L, Hkv, Dh), jnp.float32)
+        v = jax.random.normal(kv, (B, L, Hkv, Dh), jnp.float32)
+        dy = jax.random.normal(kd, (B, L, H, Dh), jnp.float32)
+
+        def check(name, a, b, tol=2e-3):
+            d = float(jnp.max(jnp.abs(a - b)))
+            s = float(jnp.max(jnp.abs(b))) + 1e-8
+            assert d / s < tol, f"{name}: rel={d/s:.2e}"
+
+        for window in (None, 24):
+            ref = chunked_attention(q, k, v, causal=True, window=window,
+                                    q_offset=0, chunk_kv=16)
+            for name, fn in (("ring", cp_ring_attention),
+                             ("allgather", cp_allgather_attention)):
+                f = lambda q_, k_, v_: fn(q_, k_, v_, mesh=mesh,
+                                          axis="model", window=window,
+                                          q_offset=0)
+                check(f"{name} fwd w={window}", jax.jit(f)(q, k, v), ref)
+                lr = lambda q_, k_, v_: jnp.sum(chunked_attention(
+                    q_, k_, v_, causal=True, window=window, chunk_kv=16) * dy)
+                ls = lambda q_, k_, v_: jnp.sum(f(q_, k_, v_) * dy)
+                gr = jax.grad(lr, argnums=(0, 1, 2))(q, k, v)
+                gs = jax.jit(jax.grad(ls, argnums=(0, 1, 2)))(q, k, v)
+                for i, nm in enumerate("qkv"):
+                    check(f"{name} d{nm} w={window}", gs[i], gr[i])
+        print("ATTN-OK")
+    """)
+    assert "ATTN-OK" in out
+
+
+# ------------------------------------------- per-mixer train-step parity
+
+def test_cp_train_step_matches_single_device_per_mixer():
+    """The acceptance gate: for every registered training mixer, loss AND
+    grads of the cp-sharded step (2x4 mesh, cp over 'model') match the
+    single-device step under the FP32 policy.  hyena runs with remat=True
+    to prove cp composes with rematerialization."""
+    out = run_subprocess("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.base import ModelConfig
+        from repro.common.policy import FP32
+        from repro.train import optim as O
+        from repro.train import trainer as T
+
+        def small_cfg(mixer):
+            return ModelConfig(
+                name=f"cp-{mixer}", family="test",
+                n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+                d_ff=64, vocab_size=64, pattern=(mixer,), local_window=8,
+                ssm_state=16, ssd_head_dim=16, rnn_width=32,
+                hyena_filter_width=16, hyena_pos_dim=9,
+            )
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        B, L = 8, 32
+        for mixer in ["hyena", "attention", "local_attention", "ssd"]:
+            cfg = small_cfg(mixer)
+            tok = jax.random.randint(jax.random.PRNGKey(1), (B, L), 0, 64)
+            lab = jax.random.randint(jax.random.PRNGKey(2), (B, L), 0, 64)
+            batch = {"tokens": tok, "labels": lab}
+            tcfg1 = T.TrainConfig(
+                optimizer=O.AdamWConfig(lr=1e-3, warmup_steps=0),
+                remat=(mixer == "hyena"), policy=FP32)
+            tcfg2 = dataclasses.replace(tcfg1, cp_axis="model")
+            state, axes = T.init_train_state(jax.random.PRNGKey(0), cfg)
+            params = state["params"]
+
+            ctx1 = tcfg1.apply_context()
+            (l1, _), g1 = jax.value_and_grad(
+                lambda p, b: T._loss(p, cfg, tcfg1, ctx1, b),
+                has_aux=True)(params, batch)
+
+            ectx = tcfg2.apply_context(mesh=mesh)
+            p2 = jax.device_put(params, ectx.param_shardings(axes, params))
+            b2 = {k: jax.device_put(
+                      v, ectx.data_sharding(v.ndim, v.shape[0], v.shape[1]))
+                  for k, v in batch.items()}
+            ctx2 = tcfg2.apply_context()
+            with ectx.scope():
+                (l2, _), g2 = jax.jit(jax.value_and_grad(
+                    lambda p, b: T._loss(p, cfg, tcfg2, ctx2, b),
+                    has_aux=True))(p2, b2)
+                l2 = float(l2)
+            dl = abs(float(l1) - l2)
+            worst = 0.0
+            for a, b in zip(jax.tree_util.tree_leaves(g1),
+                            jax.tree_util.tree_leaves(g2)):
+                a = np.asarray(a, np.float32)
+                b = np.asarray(jax.device_get(b), np.float32)
+                scale = max(np.abs(a).max(), 1e-6)
+                worst = max(worst, np.abs(a - b).max() / scale)
+            assert dl < 1e-4, f"{mixer}: dloss={dl:.2e}"
+            assert worst < 1e-3, f"{mixer}: grad_rel={worst:.2e}"
+            print(f"{mixer} dloss={dl:.2e} grad_rel={worst:.2e} OK")
+        print("MIXERS-OK")
+    """)
+    assert "MIXERS-OK" in out
+
+
+def test_cp_full_train_step_runs_and_composes():
+    """End-to-end make_train_step under cp: optimizer update, microbatches,
+    and in-step halo-exchanged targets (no labels in the batch), finite
+    loss, params actually move."""
+    out = run_subprocess("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.base import ModelConfig
+        from repro.common.policy import FP32
+        from repro.train import optim as O
+        from repro.train import trainer as T
+
+        cfg = ModelConfig(
+            name="cp-e2e", family="test",
+            n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+            d_ff=64, vocab_size=64, pattern=("hyena", "attention"),
+            local_window=8, ssm_state=16, ssd_head_dim=16, rnn_width=32,
+            hyena_filter_width=16, hyena_pos_dim=9,
+        )
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        tcfg = T.TrainConfig(
+            optimizer=O.AdamWConfig(lr=1e-3, warmup_steps=0),
+            remat=True, policy=FP32, cp_axis="model", microbatches=2)
+        ectx = tcfg.apply_context(mesh=mesh)
+        state, axes = T.init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+        state = ectx.place(state, ectx.train_state_shardings(axes, state))
+        tok = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, 64)
+        batch = {"tokens": jax.device_put(
+            tok, ectx.data_sharding(2, 8, 32))}
+        step = T.jit_train_step(cfg, tcfg)
+        with ectx.scope():
+            p0 = jax.device_get(
+                jax.tree_util.tree_leaves(state["params"])[0])
+            state, m = step(state, batch)
+            state, m = step(state, batch)
+            loss = float(m["loss"])
+            p1 = jax.device_get(
+                jax.tree_util.tree_leaves(state["params"])[0])
+        assert np.isfinite(loss), loss
+        assert np.abs(p1 - p0).max() > 0, "params did not move"
+        print(f"E2E-OK loss={loss:.3f}")
+    """)
+    assert "E2E-OK" in out
+
+
+# --------------------------------------------------- halo target shift
+
+def test_cp_shift_targets_matches_plain_shift():
+    """One-token halo exchange across shard boundaries reproduces the
+    plain shifted-by-one targets exactly; the last global position is
+    IGNORE-masked."""
+    out = run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.train.trainer import cp_shift_targets
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        tok = jax.random.randint(jax.random.PRNGKey(0), (4, 32), 0, 64)
+        ref = cp_shift_targets(tok)  # plain concat shift
+        got = jax.jit(lambda t: cp_shift_targets(t, mesh, "model"))(tok)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+        assert int(ref[0, -1]) == -1
+        print("HALO-OK")
+    """)
+    assert "HALO-OK" in out
+
+
+# ------------------------------------------- in-process (single device)
+
+def test_microbatch_validation_names_batch_and_axis():
+    """make_train_step(microbatches=n) with B % n != 0 must raise an
+    actionable ValueError naming B, n, and the data axis — not a raw
+    reshape trace error."""
+    from repro.configs.base import ModelConfig
+    from repro.train import optim as O
+    from repro.train import trainer as T
+
+    cfg = ModelConfig(
+        name="mb-val", family="test",
+        n_layers=1, d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+        d_ff=64, vocab_size=64, pattern=("hyena",), local_window=8,
+        ssm_state=16, ssd_head_dim=16, rnn_width=32,
+        hyena_filter_width=16, hyena_pos_dim=9,
+    )
+    tcfg = T.TrainConfig(
+        optimizer=O.AdamWConfig(lr=1e-3, warmup_steps=0), microbatches=2
+    )
+    state, _ = T.init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    tok = jnp.zeros((3, 16), jnp.int32)  # B=3 not divisible by n=2
+    step = T.make_train_step(cfg, tcfg)
+    with pytest.raises(ValueError) as ei:
+        step(state, {"tokens": tok})
+    msg = str(ei.value)
+    assert "microbatches=2" in msg
+    assert "B=3" in msg
+    assert "data" in msg
+
+
+def test_fft_sp_off_mesh_fallback_warns_once():
+    """Satellite bugfix: fft_sp off-mesh silently fell back to the local
+    full-L FFT.  It must still fall back (correctness) but warn exactly
+    once, and the result must match the local reference."""
+    import warnings
+
+    from repro.core import conv_api
+    from repro.core.fftconv import fft_causal_conv
+
+    u = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 4), jnp.float32)
+    h = jax.random.normal(jax.random.PRNGKey(1), (4, 16), jnp.float32)
+    conv = conv_api.get_conv_backend("fft_sp")
+
+    conv_api._FFT_SP_WARNED = False
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        out1 = conv(u, h, None)
+        out2 = conv(u, h, None)
+    hits = [x for x in w if "fft_sp" in str(x.message)]
+    assert len(hits) == 1, [str(x.message) for x in w]
+    np.testing.assert_allclose(
+        np.asarray(out1), np.asarray(fft_causal_conv(u, h, None)),
+        rtol=2e-3, atol=2e-3,
+    )
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_batch_spec_cp_seq_rule():
+    """The rule-engine extension: batch_spec shards dim0 over data axes and
+    dim1 over the cp axis when divisible; non-divisible seq replicates."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import batch_spec
+
+    class FakeMesh:
+        shape = {"data": 2, "model": 4}
+
+    assert batch_spec(FakeMesh(), 2, 8, 32, cp_axis="model") == P("data", "model")
+    assert batch_spec(FakeMesh(), 2, 8, 30, cp_axis="model") == P("data")
+    assert batch_spec(FakeMesh(), 2, 8, 32, cp_axis=None) == P("data")
+    # batch not divisible → replicated dim0, seq still shards
+    assert batch_spec(FakeMesh(), 2, 3, 32, cp_axis="model") == P(None, "model")
+
+
+# ------------------------------------------------ long-context smoke
+
+@pytest.mark.slow
+def test_cp_long_context_trains_where_unsharded_peak_is_larger():
+    """A sequence length whose unsharded lowering needs a multiple of the
+    cp step's per-device temp memory actually *trains* under cp_axis.  On
+    CPU nothing truly OOMs, so the 'does not fit' claim is made the way
+    the bench artifact records it: XLA buffer-assignment peak of the
+    unsharded compile vs the executed cp compile."""
+    out = run_subprocess("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.base import ModelConfig
+        from repro.common.policy import FP32
+        from repro.train import optim as O
+        from repro.train import trainer as T
+
+        cfg = ModelConfig(
+            name="cp-long", family="test",
+            n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+            d_ff=128, vocab_size=128, pattern=("hyena",),
+            local_window=64, ssm_state=16, ssd_head_dim=16, rnn_width=64,
+            hyena_filter_width=16, hyena_pos_dim=9,
+        )
+        B, L = 2, 8 * 4096   # 32K tokens, sharded 4K/chip over cp=8
+        opt = O.AdamWConfig(lr=1e-3, warmup_steps=0)
+        tok = jax.random.randint(jax.random.PRNGKey(1), (B, L), 0, 128)
+
+        def peak(tcfg, mesh=None, execute=False):
+            ectx = tcfg.apply_context(mesh=mesh)
+            state, axes = T.init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+            batch = {"tokens": tok}
+            if mesh is not None:
+                state = ectx.place(
+                    state, ectx.train_state_shardings(axes, state))
+                batch = {"tokens": jax.device_put(
+                    tok, ectx.data_sharding(2, B, L))}
+            step = jax.jit(T.make_train_step(cfg, tcfg))
+            with ectx.scope():
+                compiled = step.lower(state, batch).compile()
+                mem = compiled.memory_analysis()
+                p = int(mem.temp_size_in_bytes)
+                if execute:
+                    state, m = compiled(state, batch)
+                    assert np.isfinite(float(m["loss"]))
+            return p
+
+        base = T.TrainConfig(optimizer=opt, remat=False, policy=FP32)
+        mesh = jax.make_mesh((1, 8), ("data", "model"))
+        cp = dataclasses.replace(base, cp_axis="model")
+        p_cp = peak(cp, mesh=mesh, execute=True)
+        p_un = peak(base)  # lowered only — this is the one that OOMs for real
+        print(f"peak unsharded={p_un} cp={p_cp} ratio={p_un/max(p_cp,1):.1f}")
+        assert p_un > 2 * p_cp, (p_un, p_cp)
+        print("LONGCTX-OK")
+    """)
+    assert "LONGCTX-OK" in out

@@ -205,8 +205,9 @@ def test_kv_seq_fallback_shards_long_rings():
 def test_sp_threshold_and_routing(monkeypatch):
     """conv_backend_for: fft_sp past the per-mesh threshold (auto =
     SP_TOKENS_PER_CHIP × model size), the configured backend below it,
-    divisibility guarded, 0 = disabled; an explicitly configured backend
-    is never silently overridden unless sp_min_len opts back in."""
+    0 = disabled; an explicitly configured backend is never silently
+    overridden unless sp_min_len opts back in.  Non-divisible L routes
+    too — spconv pads to the next multiple internally (DESIGN.md §12)."""
     from repro.distributed.execution import SP_ENV_VAR
 
     class Mesh8:
@@ -217,7 +218,7 @@ def test_sp_threshold_and_routing(monkeypatch):
     assert ctx.sp_threshold() == auto
     assert ctx.conv_backend_for(auto) == "fft_sp"
     assert ctx.conv_backend_for(auto - 8) is None  # below threshold
-    assert ctx.conv_backend_for(auto + 1) is None  # not divisible by 8
+    assert ctx.conv_backend_for(auto + 1) == "fft_sp"  # pads internally
     # explicit sp_min_len opts a configured backend into routing
     ctx2 = ExecutionContext(mesh=Mesh8(), sp_min_len=64,
                             conv_backend="blockfft")
