@@ -7,7 +7,11 @@ The single static ``generate()`` call below is the simplest serving path.
 For concurrent requests with mixed lengths, per-request sampling params,
 and per-token streaming callbacks, use the continuous-batching API —
 ``repro.serve.engine.ServeEngine.submit()/step()/drain()`` — shown in
-``examples/serve_batched.py`` (architecture in DESIGN.md §4).
+``examples/serve_batched.py`` (architecture in DESIGN.md §4).  That API
+also carries the request lifecycle guards (DESIGN.md §13): ``cancel()``,
+tick deadlines, and load shedding, each finalizing a structured
+``RequestResult`` (status completed / failed / deadline_exceeded /
+cancelled / shed, with partial tokens preserved).
 """
 import argparse
 import dataclasses

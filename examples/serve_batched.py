@@ -20,6 +20,12 @@ and later requests fork it copy-on-write — watch the per-request
 ``prefix_cached_tokens`` in the summary line.
 
     PYTHONPATH=src python examples/serve_batched.py --arch hyena-153m --paged
+
+Lifecycle guards (DESIGN.md §13): the demo also cancels one request
+mid-decode and submits one with a tick ``deadline`` — both finalize with
+a structured ``RequestResult`` (``engine.result(rid)``; status one of
+completed / failed / deadline_exceeded / cancelled / shed, always
+carrying the partial tokens) instead of vanishing or wedging the pool.
 """
 import argparse
 import dataclasses
@@ -87,6 +93,16 @@ def main():
 
     t0 = time.time()
     rids = {}
+    # lifecycle guards (DESIGN.md §13): one request is cancelled
+    # mid-decode and one carries a tick deadline it cannot meet — both
+    # finalize with a structured RequestResult (partial tokens kept)
+    # and release their slot back to the pool immediately
+    enc0 = np.asarray(tokenizer.encode(prompts[0], add_bos=False))
+    doomed = eng.submit(enc0, max_new_tokens=args.new_tokens,
+                        stream=on_token)
+    dated = eng.submit(enc0, max_new_tokens=args.new_tokens, deadline=2)
+    eng.step()  # both resident now
+    eng.cancel(doomed)
     for i, p in enumerate(prompts):
         enc = np.asarray(tokenizer.encode(p, add_bos=False))
         # per-request params: even requests greedy, odd ones sampled
@@ -107,6 +123,11 @@ def main():
             n = eng.request_metrics[rid]["prefix_cached_tokens"]
             cached = f"  [prefix_cached_tokens={n}]"
         print(f"  {p!r} -> {tokenizer.decode(np.asarray(out[rid]))!r}{cached}")
+    for rid, why in ((doomed, "cancel()"), (dated, "deadline=2")):
+        res = eng.result(rid)
+        print(f"  lifecycle[{why}]: status={res.status} after "
+              f"{len(res.tokens)} partial tokens")
+        assert not res.ok
     print(f"{toks} tokens in {dt:.1f}s ({toks / dt:.1f} tok/s, "
           f"slots={args.slots}, requests={len(prompts)})")
     print("OK")

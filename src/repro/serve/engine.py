@@ -44,20 +44,25 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.common.ft import Heartbeat, StragglerMonitor, retry
 from repro.common.policy import Policy
 from repro.configs.base import ModelConfig
 from repro.distributed.execution import ExecutionContext
 from repro.models import lm
 from repro.models.mixer_api import get_mixer
+from repro.serve.faults import FaultInjector, TransientStepError
 from repro.serve.sampling import sample, sample_slots
-from repro.serve.scheduler import Backend, Request, SamplingParams, Scheduler
+from repro.serve.scheduler import (
+    Backend, Request, RequestResult, SamplingParams, Scheduler,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +83,20 @@ class ServeConfig:
     # mixed precision: None derives Policy(compute_dtype=cache_dtype) —
     # serving holds policy-cast weights (cast once at engine construction)
     policy: Optional[Policy] = None
+    # --- failure-domain knobs (DESIGN.md §13)
+    # NaN quarantine: a request whose logits go non-finite is evicted and
+    # replayed from its last good token; after this many strikes it fails
+    # structurally (status="failed") instead of replaying again
+    quarantine_strikes: int = 2
+    # bounded retry-with-backoff for transient step/prefill failures
+    step_retry_attempts: int = 3
+    step_retry_base_delay: float = 0.0  # 0 = retry immediately (tests)
+    # load shedding: once queued work (queue + readmits) exceeds this, the
+    # weakest queued arrival is rejected with status="shed"; 0 disables
+    overload_threshold: int = 0
+    # liveness file, atomically rewritten once per step() when set — an
+    # external watchdog detects a hung engine by mtime
+    heartbeat_path: Optional[str] = None
 
     def __post_init__(self):
         self.apply_context()  # unknown backend names fail here, not on the
@@ -87,6 +106,21 @@ class ServeConfig:
         if self.decode_quantum < 1:
             raise ValueError(
                 f"decode_quantum must be >= 1, got {self.decode_quantum}"
+            )
+        if self.quarantine_strikes < 1:
+            raise ValueError(
+                f"quarantine_strikes must be >= 1, got "
+                f"{self.quarantine_strikes}"
+            )
+        if self.step_retry_attempts < 1:
+            raise ValueError(
+                f"step_retry_attempts must be >= 1, got "
+                f"{self.step_retry_attempts}"
+            )
+        if self.overload_threshold < 0:
+            raise ValueError(
+                f"overload_threshold must be >= 0, got "
+                f"{self.overload_threshold}"
             )
 
     def apply_context(self, mesh=None) -> ExecutionContext:
@@ -221,14 +255,20 @@ def _donate_pool_args() -> bool:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("cfg", "ctx", "dtype", "max_len")
+    jax.jit, static_argnames=("cfg", "ctx", "dtype", "max_len", "faulty")
 )
 def _prefill_and_sample(
-    params, prompt, temp, topk, rid, count, base_key,
-    *, cfg: ModelConfig, ctx, dtype, max_len: int,
+    params, prompt, temp, topk, rid, count, base_key, poison,
+    *, cfg: ModelConfig, ctx, dtype, max_len: int, faulty: bool = False,
 ):
     """Prefill one request (batch 1) and sample its first token with the
-    request's own key stream.  Returns (token (), cache).
+    request's own key stream.  Returns (token (), ok (), cache), where
+    ``ok`` is the always-on finite guard over the last-token logits — the
+    NaN-quarantine trigger for the admission prefill (DESIGN.md §13).
+
+    ``faulty`` is static: engines without logit-poisoning fault injection
+    compile the exact program they had before (``poison`` unused, DCE'd);
+    chaos engines add the scalar to the logits row before the guard.
 
     Under a mesh context this is the tensor-parallel prefill: activations
     follow the ``ctx.shard`` constraints, long prompts route through the
@@ -247,18 +287,24 @@ def _prefill_and_sample(
     )
     key = request_token_key(base_key, rid, count)
     lg = _replicate_logits(logits[:, -1], ctx)
+    if faulty:
+        lg = lg + poison
+    ok = jnp.all(jnp.isfinite(lg))
     tok = sample_slots(key[None], lg, temp, topk)
-    return tok[0], cache
+    return tok[0], ok, cache
 
 
 def _decode_and_sample_impl(
     params, tokens, caches, active, temps, topks, rids, counts, base_key,
+    poison,
     *, cfg: ModelConfig, ctx, dtype, quantum: int,
-    sampled: bool, truncated: bool,
+    sampled: bool, truncated: bool, faulty: bool = False,
 ):
     """``quantum`` slot-masked decode steps over the whole pool (one fused
-    lax.scan) + per-slot sampling.  Returns tokens (quantum, S) and the
-    final caches.
+    lax.scan) + per-slot sampling.  Returns (tokens (quantum, S),
+    finite (quantum, S), final caches) — ``finite`` is the always-on
+    per-slot NaN-quarantine guard (True for inactive slots), one
+    ``isfinite`` reduce over each step's logits (DESIGN.md §13).
 
     Inactive slots run the same XLA program (static shapes) but their cache
     update is masked out, keeping free slots exactly at their reset state.
@@ -271,16 +317,25 @@ def _decode_and_sample_impl(
     Under a mesh context the pool stays sharded through the scan (the
     engine constrains it to the rule-derived layout at entry and exit) and
     the vocab-sharded logits are gathered before sampling.
+
+    ``faulty`` is static: without logit-poisoning fault injection the scan
+    carries no xs and the program is unchanged.  Poison is applied to the
+    *logits* after the cache update — injected NaN/Inf corrupts the token
+    stream (which quarantine then truncates and replays via continuation
+    prefill), never the cache buffers of batch neighbors.
     """
     compute = getattr(ctx, "compute_dtype", None) or dtype
 
-    def body(carry, _):
+    def body(carry, xs):
         tok, caches, counts = carry
         logits, new_caches = lm.decode_step(
             params, cfg, tok, caches, compute_dtype=compute, ctx=ctx,
         )
         logits = _replicate_logits(logits, ctx)
         new_caches = lm.mask_slots(cfg, new_caches, caches, active)
+        if faulty:
+            logits = logits + xs[:, None]  # per-slot poison column
+        finite = (~active) | jnp.all(jnp.isfinite(logits), axis=-1)
         if sampled:
             keys = jax.vmap(
                 lambda r, c: request_token_key(base_key, r, c)
@@ -290,12 +345,16 @@ def _decode_and_sample_impl(
         else:
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         nxt = jnp.where(active, nxt, 0)
-        return (nxt, new_caches, counts + active.astype(jnp.int32)), nxt
+        return (
+            (nxt, new_caches, counts + active.astype(jnp.int32)),
+            (nxt, finite),
+        )
 
-    (_, caches, _), toks = jax.lax.scan(
-        body, (tokens, caches, counts), None, length=quantum
+    (_, caches, _), (toks, finite) = jax.lax.scan(
+        body, (tokens, caches, counts), poison if faulty else None,
+        length=quantum,
     )
-    return toks, caches
+    return toks, finite, caches
 
 
 def _pool_insert_impl(caches, slot, one, *, cfg: ModelConfig):
@@ -315,6 +374,7 @@ def _jitted_pool_ops():
         _decode_and_sample_impl,
         static_argnames=(
             "cfg", "ctx", "dtype", "quantum", "sampled", "truncated",
+            "faulty",
         ),
         donate_argnums=(2,) if donate else (),
     )
@@ -354,7 +414,8 @@ class ServeEngine(Backend):
 
     def __init__(self, params, cfg: ModelConfig, scfg: ServeConfig,
                  *, seed: int = 0,
-                 ectx: Optional[ExecutionContext] = None, param_axes=None):
+                 ectx: Optional[ExecutionContext] = None, param_axes=None,
+                 injector: Optional[FaultInjector] = None):
         for m in cfg.pattern:
             if not get_mixer(m).supports_decode:
                 raise ValueError(
@@ -387,8 +448,24 @@ class ServeEngine(Backend):
         self._mesh_ops = None  # per-engine jitted (decode, insert, reset)
         self._last_tok = np.zeros((S,), np.int32)  # last emitted, per slot
         self._requests: Dict[int, Request] = {}  # queued + resident only
-        self._results: Dict[int, np.ndarray] = {}  # finished
+        self._final: Dict[int, RequestResult] = {}  # terminal outcomes
         self._next_rid = 0
+        # --- failure-domain state (DESIGN.md §13)
+        self.injector = injector
+        # static per engine: chaos engines that poison logits compile the
+        # poison-threading program once; everyone else keeps the old one
+        self._faulty = injector is not None and injector.poisons
+        self._tick = 0
+        self._prefill_seq = 0  # monotone prefill-dispatch counter (coins)
+        self._pending_quarantine: List[int] = []  # rids flagged this tick
+        self.n_quarantined = 0
+        self.n_retried = 0  # transient step/prefill errors absorbed
+        self.n_shed = 0
+        self._straggler = StragglerMonitor()
+        self._heartbeat = None
+        if scfg.heartbeat_path is not None:
+            self._heartbeat = Heartbeat(scfg.heartbeat_path)
+            self._heartbeat.beat()  # liveness file exists from construction
 
     # ------------------------------------------------------------- public
     def submit(
@@ -400,9 +477,17 @@ class ServeEngine(Backend):
         top_k: Optional[int] = None,
         stop_tokens: Sequence[int] = (),
         stream: Optional[Callable[[int, int, bool], None]] = None,
+        deadline: Optional[int] = None,
     ) -> int:
         """Enqueue a request; returns its rid.  Generation starts at the
-        next ``step()``."""
+        next ``step()``.
+
+        ``deadline`` is an absolute engine tick (see ``health()['tick']``):
+        if the request hasn't finished by the end of that tick it aborts
+        with ``RequestResult(status="deadline_exceeded")`` and partial
+        tokens.  Under overload (``scfg.overload_threshold``) the weakest
+        queued arrival — possibly this one — is shed with status "shed";
+        check ``result(rid)``."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 1:
             raise ValueError("empty prompt")
@@ -422,22 +507,43 @@ class ServeEngine(Backend):
         )
         rid = self._next_rid
         self._next_rid += 1
-        req = Request(rid=rid, prompt=prompt, params=sp, stream=stream)
+        if deadline is not None and int(deadline) <= self._tick:
+            # already expired at submission: structured abort, no residency
+            self._final[rid] = RequestResult(
+                rid, "deadline_exceeded", (),
+                f"deadline {deadline} <= tick {self._tick} at submit",
+            )
+            return rid
+        req = Request(rid=rid, prompt=prompt, params=sp, stream=stream,
+                      deadline=None if deadline is None else int(deadline))
         self._requests[rid] = req
         self.scheduler.submit(req)
+        self._shed_overload()
         return rid
 
     def step(self):
         """One scheduler tick (admissions + one pooled decode step).
         Returns the list of :class:`Event` emitted this step."""
+        self._tick += 1
+        t0 = time.perf_counter()
+        if self.injector is not None:
+            slow = self.injector.slow_step_seconds(self._tick)
+            if slow:
+                time.sleep(slow)
+        self._enforce_deadlines()
         try:
             return self.scheduler.step(self)
         finally:
-            # a long-lived engine must not retain finished Request objects
-            # (prompts, token lists, stream-callback closures) forever.
-            # Prune from scheduler state, in a finally: a raising stream
-            # callback must not leave finished requests pinned.
+            # quarantine first (evicts poisoned residents back to the
+            # readmit queue or finalizes them), then prune: a long-lived
+            # engine must not retain finished Request objects (prompts,
+            # token lists, stream-callback closures) forever — and a
+            # raising stream callback must not leave either list pinned.
+            self._process_quarantine()
             self._prune_finished()
+            self._straggler.record(self._tick, time.perf_counter() - t0)
+            if self._heartbeat is not None:
+                self._heartbeat.beat()
 
     def _prune_finished(self) -> None:
         live = {r.rid for r in self.scheduler.queue}
@@ -445,7 +551,112 @@ class ServeEngine(Backend):
         live |= {r.rid for r in self.scheduler.slots.values()}
         for rid in [r for r in self._requests if r not in live]:
             req = self._requests.pop(rid)
-            self._results[rid] = np.asarray(req.tokens, np.int32)
+            self._finalize(req, "completed")
+
+    # ------------------------------------------- lifecycle guards (§13)
+    def _finalize(self, req: Request, status: str, detail: str = "") -> None:
+        self._final[req.rid] = RequestResult(
+            req.rid, status, tuple(req.tokens), detail
+        )
+
+    def _abort(self, rid: int, status: str, detail: str = "") -> bool:
+        """Terminate a live (queued or resident) request with a structured
+        status, releasing its slot if resident.  False if rid is unknown
+        or already terminal."""
+        req = self._requests.get(rid)
+        if req is None:
+            return False
+        if req.slot >= 0:
+            self.scheduler._release(req.slot, self)
+            req.slot = -1
+        else:
+            for q in (self.scheduler.queue, self.scheduler.readmit):
+                try:
+                    q.remove(req)
+                    break
+                except ValueError:
+                    pass
+        del self._requests[rid]
+        self._finalize(req, status, detail)
+        return True
+
+    def cancel(self, rid: int) -> bool:
+        """End-to-end cancellation: queued, readmitted, or mid-decode, the
+        request's slot state is released and it finalizes with partial
+        tokens and ``status="cancelled"``.  False if unknown/finished."""
+        return self._abort(rid, "cancelled")
+
+    def _enforce_deadlines(self) -> None:
+        expired = [
+            rid for rid, req in self._requests.items()
+            if req.deadline is not None and self._tick > req.deadline
+        ]
+        for rid in expired:
+            dl = self._requests[rid].deadline
+            self._abort(rid, "deadline_exceeded",
+                        f"deadline tick {dl} < tick {self._tick}")
+
+    def _queue_depth(self) -> int:
+        return len(self.scheduler.queue) + len(self.scheduler.readmit)
+
+    def _shed_overload(self) -> None:
+        """Reject the weakest queued work past the overload threshold.
+        The dense queue is FIFO (no priority classes), so the weakest
+        arrival is the newest; readmitted requests are never shed (their
+        partial decode is work worth preserving)."""
+        thr = self.scfg.overload_threshold
+        if thr <= 0:
+            return
+        while self._queue_depth() > thr and self.scheduler.queue:
+            victim = self.scheduler.queue[-1]
+            self._abort(victim.rid, "shed",
+                        f"queue depth {self._queue_depth()} > {thr}")
+            self.n_shed += 1
+
+    def _process_quarantine(self) -> None:
+        """Handle slots whose decode-quantum logits went non-finite this
+        tick: the request is evicted (slot state released) and replayed
+        from its last good token via a continuation prefill — the
+        ``(seed, rid, token_index)`` key streams make the replay
+        token-identical — or finalized ``status="failed"`` once it has
+        struck out (``scfg.quarantine_strikes``) or cannot be replayed
+        (MoE breaks prefill/decode parity on readmission)."""
+        pending, self._pending_quarantine = self._pending_quarantine, []
+        for rid in pending:
+            req = self._requests.get(rid)
+            if req is None or req.slot < 0:
+                continue  # finished before the poisoned step — moot
+            req.quarantines += 1
+            self.n_quarantined += 1
+            if self.cfg.moe:
+                self._abort(rid, "failed",
+                            "non-finite logits; MoE cannot replay "
+                            "(no continuation parity)")
+            elif req.quarantines >= self.scfg.quarantine_strikes:
+                self._abort(rid, "failed",
+                            f"non-finite logits after "
+                            f"{req.quarantines} quarantine strike(s)")
+            else:
+                self.scheduler.evict(rid, self)  # replay from last-good
+
+    def health(self) -> Dict[str, Any]:
+        """Liveness/saturation surface for an external controller
+        (DESIGN.md §13): queue depths, terminal counts, quarantine /
+        retry / shed counters, and stuck-step detection (EWMA straggler
+        monitor over step wall-times)."""
+        return {
+            "tick": self._tick,
+            "queued": len(self.scheduler.queue),
+            "readmit": len(self.scheduler.readmit),
+            "resident": len(self.scheduler.slots),
+            "finished": len(self._final),
+            "quarantined": self.n_quarantined,
+            "retried": self.n_retried,
+            "shed": self.n_shed,
+            "stragglers": self._straggler.stragglers,
+            "last_straggler": self._straggler.last_report,
+            "heartbeat": self.scfg.heartbeat_path,
+        }
 
     def evict(self, rid: int) -> bool:
         """Preempt a resident request back to the admission queue (its slot
@@ -476,12 +687,25 @@ class ServeEngine(Backend):
                     | {r.rid for r in self.scheduler.readmit}
                     | {r.rid for r in self.scheduler.slots.values()}
                 )
-                raise DrainExhausted(max_steps, self.results(), active)
+                partial = self.results()
+                # release the unfinished residents' slot state BEFORE
+                # raising so an abandoning caller doesn't leak the pool:
+                # eviction resets each slot (pool back to all-free zeros)
+                # and readmits the request, so the engine stays resumable.
+                # MoE can't evict-with-continuation; its residents stay.
+                if not self.cfg.moe:
+                    for rid in [r.rid for r in
+                                self.scheduler.slots.values()]:
+                        self.scheduler.evict(rid, self)
+                raise DrainExhausted(max_steps, partial, active)
         return self.results()
 
     def results(self) -> Dict[int, np.ndarray]:
         """Finished outputs plus the partial tokens of in-flight requests."""
-        out = dict(self._results)
+        out = {
+            rid: np.asarray(res.tokens, np.int32)
+            for rid, res in self._final.items()
+        }
         out.update({
             rid: np.asarray(req.tokens, np.int32)
             for rid, req in self._requests.items()
@@ -491,7 +715,15 @@ class ServeEngine(Backend):
     def pop_result(self, rid: int) -> np.ndarray:
         """Take (and forget) a finished request's tokens — the retention
         valve for servers that run one engine indefinitely."""
-        return self._results.pop(rid)
+        return np.asarray(self._final.pop(rid).tokens, np.int32)
+
+    def result(self, rid: int) -> Optional[RequestResult]:
+        """The structured terminal outcome of ``rid`` (None while live)."""
+        return self._final.get(rid)
+
+    def request_results(self) -> Dict[int, RequestResult]:
+        """All terminal outcomes so far (rid -> :class:`RequestResult`)."""
+        return dict(self._final)
 
     # --------------------------------------------------- pool op selection
     def _pool_ops(self):
@@ -511,15 +743,16 @@ class ServeEngine(Backend):
                 )
 
             def decode_impl(params, tokens, caches, active, temps, topks,
-                            rids, counts, base_key, *, cfg, ctx, dtype,
-                            quantum, sampled, truncated):
-                toks, out = _decode_and_sample_impl(
+                            rids, counts, base_key, poison, *, cfg, ctx,
+                            dtype, quantum, sampled, truncated,
+                            faulty=False):
+                toks, finite, out = _decode_and_sample_impl(
                     params, tokens, constrain(caches), active, temps,
-                    topks, rids, counts, base_key, cfg=cfg, ctx=ctx,
-                    dtype=dtype, quantum=quantum, sampled=sampled,
-                    truncated=truncated,
+                    topks, rids, counts, base_key, poison, cfg=cfg,
+                    ctx=ctx, dtype=dtype, quantum=quantum, sampled=sampled,
+                    truncated=truncated, faulty=faulty,
                 )
-                return toks, constrain(out)
+                return toks, finite, constrain(out)
 
             def insert_impl(caches, slot, one, *, cfg):
                 return constrain(
@@ -537,7 +770,7 @@ class ServeEngine(Backend):
                     decode_impl,
                     static_argnames=(
                         "cfg", "ctx", "dtype", "quantum", "sampled",
-                        "truncated",
+                        "truncated", "faulty",
                     ),
                     donate_argnums=(2,) if donate else (),
                 ),
@@ -553,19 +786,73 @@ class ServeEngine(Backend):
         return self._mesh_ops
 
     # ----------------------------------------------- scheduler Backend API
-    def prefill_into_slot(self, slot: int, req: Request) -> int:
+    def prefill_into_slot(self, slot: int, req: Request) -> Optional[int]:
         prompt = req.resume_prompt[None, :]  # (1, L) exact length
+        while True:
+            attempt = [0]
+
+            def dispatch():
+                a = attempt[0]
+                attempt[0] += 1
+                if self.injector is not None:
+                    # coins keyed by a monotone dispatch counter, so the
+                    # readmit path after retry exhaustion draws fresh
+                    # coins (deterministic, but never the same coin twice)
+                    self._prefill_seq += 1
+                    self.injector.check_prefill(
+                        self._tick, req.rid, self._prefill_seq
+                    )
+                poison = (
+                    self.injector.poison_value(
+                        req.rid, req.n_emitted, req.quarantines
+                    ) if self._faulty else 0.0
+                )
+                with self.ctx.scope():
+                    return _prefill_and_sample(
+                        self.params, jnp.asarray(prompt),
+                        jnp.asarray([req.params.temperature], jnp.float32),
+                        jnp.asarray([req.params.top_k], jnp.int32),
+                        jnp.asarray(req.rid, jnp.int32),
+                        jnp.asarray(req.n_emitted, jnp.int32),
+                        self._base_key,
+                        jnp.asarray(poison, jnp.float32),
+                        cfg=self.cfg, ctx=self.ctx,
+                        dtype=self.scfg.cache_dtype,
+                        max_len=self.scfg.max_len, faulty=self._faulty,
+                    )
+
+            try:
+                tok, ok, cache = retry(
+                    dispatch, attempts=self.scfg.step_retry_attempts,
+                    base_delay=self.scfg.step_retry_base_delay,
+                    exceptions=(TransientStepError,),
+                )
+            except TransientStepError:
+                # transient failure survived every retry: requeue ahead of
+                # arrivals and hand the slot back (scheduler None
+                # contract) — the next admission draws fresh coins
+                self.n_retried += attempt[0] - 1
+                self.scheduler.readmit.append(req)
+                return None
+            self.n_retried += attempt[0] - 1
+            if bool(ok):
+                break
+            # non-finite prefill logits: a quarantine strike.  Replay is
+            # just re-prefilling (same resume prompt, fresh poison coins
+            # via the bumped attempt) — or structured failure on
+            # strike-out / MoE (no continuation parity to lean on).
+            req.quarantines += 1
+            self.n_quarantined += 1
+            if (self.cfg.moe
+                    or req.quarantines >= self.scfg.quarantine_strikes):
+                self._requests.pop(req.rid, None)
+                self._finalize(
+                    req, "failed",
+                    f"non-finite prefill logits after "
+                    f"{req.quarantines} quarantine strike(s)",
+                )
+                return None
         with self.ctx.scope():
-            tok, cache = _prefill_and_sample(
-                self.params, jnp.asarray(prompt),
-                jnp.asarray([req.params.temperature], jnp.float32),
-                jnp.asarray([req.params.top_k], jnp.int32),
-                jnp.asarray(req.rid, jnp.int32),
-                jnp.asarray(req.n_emitted, jnp.int32),
-                self._base_key,
-                cfg=self.cfg, ctx=self.ctx, dtype=self.scfg.cache_dtype,
-                max_len=self.scfg.max_len,
-            )
             if self.pool is None:
                 pool = lm.make_slot_pool(self.cfg, cache, self.scfg.n_slots)
                 if self.ctx.mesh is not None:
@@ -592,28 +879,65 @@ class ServeEngine(Backend):
         topks = np.zeros((S,), np.int32)
         rids = np.zeros((S,), np.int32)
         counts = np.zeros((S,), np.int32)
+        quantum = self.scfg.decode_quantum
         for slot, req in requests.items():
             active[slot] = True
             temps[slot] = req.params.temperature
             topks[slot] = req.params.top_k
             rids[slot] = req.rid
             counts[slot] = req.n_emitted  # index of the token sampled now
+        poison = np.zeros((quantum, S), np.float32)
+        if self._faulty:
+            for slot, req in requests.items():
+                for i in range(quantum):
+                    poison[i, slot] = self.injector.poison_value(
+                        req.rid, req.n_emitted + i, req.quarantines
+                    )
         decode, _, _ = self._pool_ops()
-        with self.ctx.scope():
-            toks, self.pool = decode(
-                self.params, jnp.asarray(self._last_tok), self.pool,
-                jnp.asarray(active), jnp.asarray(temps), jnp.asarray(topks),
-                jnp.asarray(rids), jnp.asarray(counts), self._base_key,
-                cfg=self.cfg, ctx=self.ctx, dtype=self.scfg.cache_dtype,
-                quantum=self.scfg.decode_quantum,
-                sampled=bool((temps > 0.0).any()),
-                truncated=bool((topks > 0).any()),
-            )
+        attempt = [0]
+
+        def dispatch():
+            a = attempt[0]
+            attempt[0] += 1
+            if self.injector is not None:
+                # raises BEFORE the jitted call dispatches: a failed
+                # attempt never consumes the donated pool buffers
+                self.injector.check_step(self._tick, a)
+            with self.ctx.scope():
+                return decode(
+                    self.params, jnp.asarray(self._last_tok), self.pool,
+                    jnp.asarray(active), jnp.asarray(temps),
+                    jnp.asarray(topks), jnp.asarray(rids),
+                    jnp.asarray(counts), self._base_key,
+                    jnp.asarray(poison),
+                    cfg=self.cfg, ctx=self.ctx, dtype=self.scfg.cache_dtype,
+                    quantum=quantum,
+                    sampled=bool((temps > 0.0).any()),
+                    truncated=bool((topks > 0).any()),
+                    faulty=self._faulty,
+                )
+
+        toks, finite, self.pool = retry(
+            dispatch, attempts=self.scfg.step_retry_attempts,
+            base_delay=self.scfg.step_retry_base_delay,
+            exceptions=(TransientStepError,),
+        )
+        self.n_retried += attempt[0] - 1
         toks = np.asarray(toks)  # (quantum, S)
+        finite = np.asarray(finite)  # (quantum, S) bool
         out: Dict[int, list] = {}
-        for slot in requests:
+        for slot, req in requests.items():
             self._last_tok[slot] = int(toks[-1, slot])
-            out[slot] = [int(t) for t in toks[:, slot]]
+            col = finite[:, slot]
+            if col.all():
+                out[slot] = [int(t) for t in toks[:, slot]]
+            else:
+                # truncate at the first non-finite step: everything before
+                # it is good (kept; replay resumes after it), everything
+                # from it on is poisoned garbage
+                good = int(np.argmax(~col))
+                out[slot] = [int(t) for t in toks[:good, slot]]
+                self._pending_quarantine.append(req.rid)
         return out
 
     def reset_slot(self, slot: int) -> None:

@@ -62,12 +62,14 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common.ft import Heartbeat, StragglerMonitor, retry
 from repro.configs.base import ModelConfig
 from repro.distributed.execution import ExecutionContext
 from repro.models import lm
@@ -80,9 +82,10 @@ from repro.serve.engine import (
     request_token_key,
     resolve_serve_context,
 )
+from repro.serve.faults import FaultInjector, TransientStepError
 from repro.serve.radix import RadixPrefixCache
 from repro.serve.sampling import sample_slots
-from repro.serve.scheduler import Event, Request, SamplingParams
+from repro.serve.scheduler import Event, Request, RequestResult, SamplingParams
 from repro.serve.slo import SLOQueue
 
 
@@ -245,9 +248,9 @@ def _split(spec: PoolSpec, caches, phys, table):
 
 def _paged_quantum_impl(
     params, phys, pinned, shared, table, feed0, feed_next,
-    m, adv, t0, p0, active, temps, topks, rids, base_key,
+    m, adv, t0, p0, active, temps, topks, rids, base_key, poison,
     *, cfg: ModelConfig, ctx, dtype, spec: PoolSpec, quantum: int,
-    sampled: bool, truncated: bool,
+    sampled: bool, truncated: bool, faulty: bool = False,
 ):
     """One fused quantum over the paged pool: gather block views, run
     ``quantum`` slot-masked decode steps that both absorb prompt chunks
@@ -262,20 +265,32 @@ def _paged_quantum_impl(
     >= 0; the host discards re-derived emissions (count below what the
     request already holds) during eviction-continuation refeeds.
 
-    Returns (tokens (quantum, S), emit mask (quantum, S), new phys,
-    new pinned)."""
+    Returns (tokens (quantum, S), emit mask (quantum, S), finite mask
+    (quantum, S), new phys, new pinned).  ``finite`` is the always-on
+    per-slot NaN-quarantine guard (True for slots not running a step);
+    ``faulty`` is static — without logit-poisoning fault injection the
+    scan carries no poison xs and the program is unchanged.  Poison hits
+    the logits after the cache update, so injected NaN/Inf corrupts only
+    the token stream (truncated + replayed by quarantine), never the
+    physical blocks of batch neighbors."""
     compute = getattr(ctx, "compute_dtype", None) or dtype
     caches = _assemble(spec, phys, pinned, shared, table)
 
     def body(carry, xs):
         cur, caches = carry
-        q, nxt = xs
+        if faulty:
+            q, nxt, pois = xs
+        else:
+            q, nxt = xs
         run = active & (q < adv)
         logits, new_caches = lm.decode_step(
             params, cfg, cur, caches, compute_dtype=compute, ctx=ctx,
         )
         logits = _replicate_logits(logits, ctx)
         new_caches = lm.mask_slots(cfg, new_caches, caches, run)
+        if faulty:
+            logits = logits + pois[:, None]  # per-slot poison column
+        finite = (~run) | jnp.all(jnp.isfinite(logits), axis=-1)
         count = t0 + q + 1 - p0
         if sampled:
             keys = jax.vmap(
@@ -288,13 +303,20 @@ def _paged_quantum_impl(
         emit = run & (count >= 0)
         nxt_cur = jnp.where(q + 1 < m, nxt, samp)
         nxt_cur = jnp.where(run, nxt_cur, cur)
-        return (nxt_cur, new_caches), (jnp.where(emit, samp, 0), emit)
+        return (
+            (nxt_cur, new_caches),
+            (jnp.where(emit, samp, 0), emit, finite),
+        )
 
-    (_, caches), (toks, emits) = jax.lax.scan(
-        body, (feed0, caches), (jnp.arange(quantum), feed_next)
+    xs = (
+        (jnp.arange(quantum), feed_next, poison) if faulty
+        else (jnp.arange(quantum), feed_next)
+    )
+    (_, caches), (toks, emits, finite) = jax.lax.scan(
+        body, (feed0, caches), xs
     )
     new_phys, new_pinned = _split(spec, caches, phys, table)
-    return toks, emits, new_phys, new_pinned
+    return toks, emits, finite, new_phys, new_pinned
 
 
 def _copy_blocks_impl(phys, src, dst, *, spec: PoolSpec):
@@ -372,6 +394,7 @@ def _jitted_paged_ops():
         _paged_quantum_impl,
         static_argnames=(
             "cfg", "ctx", "dtype", "spec", "quantum", "sampled", "truncated",
+            "faulty",
         ),
         donate_argnums=(1, 2) if donate else (),
     )
@@ -431,7 +454,8 @@ class PagedServeEngine:
 
     def __init__(self, params, cfg: ModelConfig, scfg: ServeConfig,
                  pcfg: Optional[PagedConfig] = None, *, seed: int = 0,
-                 ectx: Optional[ExecutionContext] = None, param_axes=None):
+                 ectx: Optional[ExecutionContext] = None, param_axes=None,
+                 injector: Optional[FaultInjector] = None):
         for m in cfg.pattern:
             if not get_mixer(m).supports_decode:
                 raise ValueError(
@@ -522,10 +546,22 @@ class PagedServeEngine:
         self._requests: Dict[int, Request] = {}
         self._prio: Dict[int, int] = {}
         self._deadline: Dict[int, Optional[int]] = {}
-        self._results: Dict[int, np.ndarray] = {}
+        self._final: Dict[int, RequestResult] = {}  # terminal outcomes
         self._next_rid = 0
         self._tick = 0
         self.request_metrics: Dict[int, Dict[str, Any]] = {}
+        # --- failure-domain state (DESIGN.md §13)
+        self.injector = injector
+        self._faulty = injector is not None and injector.poisons
+        self._pending_quarantine: List[int] = []  # rids flagged this tick
+        self.n_quarantined = 0
+        self.n_retried = 0
+        self.n_shed = 0
+        self._straggler = StragglerMonitor()
+        self._heartbeat = None
+        if scfg.heartbeat_path is not None:
+            self._heartbeat = Heartbeat(scfg.heartbeat_path)
+            self._heartbeat.beat()
 
     # ------------------------------------------------------------- public
     @property
@@ -572,15 +608,24 @@ class PagedServeEngine:
         )
         rid = self._next_rid
         self._next_rid += 1
-        req = Request(rid=rid, prompt=prompt, params=sp, stream=stream)
-        self._requests[rid] = req
-        self._prio[rid] = int(priority)
-        self._deadline[rid] = deadline
-        self.queue.push(rid, priority=priority, deadline=deadline)
         self.request_metrics[rid] = {
             "submit_tick": self._tick, "first_token_tick": None,
             "done_tick": None, "prefix_cached_tokens": 0,
         }
+        if deadline is not None and int(deadline) <= self._tick:
+            # already expired at submission: structured abort, no residency
+            self._final[rid] = RequestResult(
+                rid, "deadline_exceeded", (),
+                f"deadline {deadline} <= tick {self._tick} at submit",
+            )
+            return rid
+        req = Request(rid=rid, prompt=prompt, params=sp, stream=stream,
+                      deadline=None if deadline is None else int(deadline))
+        self._requests[rid] = req
+        self._prio[rid] = int(priority)
+        self._deadline[rid] = deadline
+        self.queue.push(rid, priority=priority, deadline=deadline)
+        self._shed_overload()
         return rid
 
     def step(self) -> List[Event]:
@@ -588,6 +633,12 @@ class PagedServeEngine:
         preemption), then one fused paged quantum that advances chunked
         prefills and decodes together."""
         self._tick += 1
+        t0 = time.perf_counter()
+        if self.injector is not None:
+            slow = self.injector.slow_step_seconds(self._tick)
+            if slow:
+                time.sleep(slow)
+        self._enforce_deadlines()
         events: List[Event] = []
         by_rid: Dict[int, Request] = {}
         try:
@@ -596,8 +647,112 @@ class PagedServeEngine:
                 self._quantum(events, by_rid)
         finally:
             self._dispatch_streams(events, by_rid)
+            self._process_quarantine()
             self._prune_finished()
+            self._straggler.record(self._tick, time.perf_counter() - t0)
+            if self._heartbeat is not None:
+                self._heartbeat.beat()
         return events
+
+    # ------------------------------------------- lifecycle guards (§13)
+    def _finalize(self, req: Request, status: str, detail: str = "") -> None:
+        self._final[req.rid] = RequestResult(
+            req.rid, status, tuple(req.tokens), detail
+        )
+
+    def _abort(self, rid: int, status: str, detail: str = "") -> bool:
+        """Terminate a live (queued or resident) request with a structured
+        status, releasing its slot's blocks (refcounted; radix-shared
+        blocks stay pinned by the tree) if resident and clearing every
+        piece of queue/priority/deadline bookkeeping.  False if rid is
+        unknown or already terminal."""
+        req = self._requests.get(rid)
+        if req is None:
+            return False
+        if req.slot >= 0:
+            self._release_slot(req.slot)
+        else:
+            self.queue.remove(rid)
+        del self._requests[rid]
+        self._prio.pop(rid, None)
+        self._deadline.pop(rid, None)
+        self.request_metrics[rid]["done_tick"] = self._tick
+        self._finalize(req, status, detail)
+        return True
+
+    def cancel(self, rid: int) -> bool:
+        """End-to-end cancellation: queued, readmitted, or mid-decode, the
+        request's blocks are released (radix pins preserved) and it
+        finalizes with partial tokens and ``status="cancelled"``."""
+        return self._abort(rid, "cancelled")
+
+    def _enforce_deadlines(self) -> None:
+        expired = [
+            rid for rid, req in self._requests.items()
+            if req.deadline is not None and self._tick > req.deadline
+        ]
+        for rid in expired:
+            dl = self._requests[rid].deadline
+            self._abort(rid, "deadline_exceeded",
+                        f"deadline tick {dl} < tick {self._tick}")
+
+    def _shed_overload(self) -> None:
+        """Past the overload threshold, reject the weakest queued arrival
+        (lowest priority, latest deadline, newest) with status "shed".
+        Readmitted requests are never shed — their partial decode is work
+        worth preserving."""
+        thr = self.scfg.overload_threshold
+        if thr <= 0:
+            return
+        while len(self.queue) > thr:
+            victim = self.queue.worst()
+            if victim is None:
+                break  # only readmits queued
+            self._abort(victim, "shed",
+                        f"queue depth {len(self.queue)} > {thr}")
+            self.n_shed += 1
+
+    def _process_quarantine(self) -> None:
+        """Slots whose quantum logits went non-finite this tick: release
+        the slot's blocks and replay from the last good token (the
+        ``(seed, rid, token_index)`` key streams make the replay
+        token-identical), or finalize ``status="failed"`` on strike-out /
+        MoE (no continuation parity to replay through)."""
+        pending, self._pending_quarantine = self._pending_quarantine, []
+        for rid in pending:
+            req = self._requests.get(rid)
+            if req is None or req.slot < 0:
+                continue  # finished before the poisoned step — moot
+            req.quarantines += 1
+            self.n_quarantined += 1
+            if self.cfg.moe:
+                self._abort(rid, "failed",
+                            "non-finite logits; MoE cannot replay "
+                            "(no continuation parity)")
+            elif req.quarantines >= self.scfg.quarantine_strikes:
+                self._abort(rid, "failed",
+                            f"non-finite logits after "
+                            f"{req.quarantines} quarantine strike(s)")
+            else:
+                self._evict_slot(req.slot)  # replay from last-good token
+
+    def health(self) -> Dict[str, Any]:
+        """Liveness/saturation surface for an external controller
+        (DESIGN.md §13)."""
+        return {
+            "tick": self._tick,
+            "queued": len(self.queue),
+            "resident": len(self.residents),
+            "finished": len(self._final),
+            "free_blocks": self.alloc.n_free,
+            "radix_nodes": 0 if self.radix is None else self.radix.n_nodes,
+            "quarantined": self.n_quarantined,
+            "retried": self.n_retried,
+            "shed": self.n_shed,
+            "stragglers": self._straggler.stragglers,
+            "last_straggler": self._straggler.last_report,
+            "heartbeat": self.scfg.heartbeat_path,
+        }
 
     def evict(self, rid: int) -> bool:
         """Preempt a resident request (continuation semantics: it re-enters
@@ -624,17 +779,27 @@ class PagedServeEngine:
             self.step()
             steps += 1
             if steps > max_steps:
-                raise DrainExhausted(
-                    max_steps, self.results(),
-                    sorted(
-                        set(r.rid for r in self.residents.values())
-                        | set(self.queue.rids())
-                    ),
+                active = sorted(
+                    set(r.rid for r in self.residents.values())
+                    | set(self.queue.rids())
                 )
+                partial = self.results()
+                # release the unfinished residents' blocks and pinned
+                # state BEFORE raising so an abandoning caller doesn't
+                # leak the pool (radix refcounts stay with the tree;
+                # flush_prefix() reclaims those).  Eviction readmits, so
+                # the engine stays resumable.  MoE can't evict.
+                if not self.cfg.moe:
+                    for slot in list(self.residents):
+                        self._evict_slot(slot)
+                raise DrainExhausted(max_steps, partial, active)
         return self.results()
 
     def results(self) -> Dict[int, np.ndarray]:
-        out = dict(self._results)
+        out = {
+            rid: np.asarray(res.tokens, np.int32)
+            for rid, res in self._final.items()
+        }
         out.update({
             rid: np.asarray(req.tokens, np.int32)
             for rid, req in self._requests.items()
@@ -642,7 +807,15 @@ class PagedServeEngine:
         return out
 
     def pop_result(self, rid: int) -> np.ndarray:
-        return self._results.pop(rid)
+        return np.asarray(self._final.pop(rid).tokens, np.int32)
+
+    def result(self, rid: int) -> Optional[RequestResult]:
+        """The structured terminal outcome of ``rid`` (None while live)."""
+        return self._final.get(rid)
+
+    def request_results(self) -> Dict[int, RequestResult]:
+        """All terminal outcomes so far (rid -> :class:`RequestResult`)."""
+        return dict(self._final)
 
     # ------------------------------------------------- prefix-cache hooks
     def flush_prefix(self) -> None:
@@ -762,6 +935,9 @@ class PagedServeEngine:
         free list -> radix LRU eviction -> preempt a strictly weaker
         resident.  Returns None when ``slot`` itself is the weakest — it
         then stalls this quantum (adv = 0) instead of thrashing."""
+        if self.injector is not None and self.injector.alloc_fails(
+                self._tick, slot):
+            return None  # injected exhaustion: stall, retry next tick
         while True:
             b = self.alloc.alloc()
             if b is not None:
@@ -873,6 +1049,22 @@ class PagedServeEngine:
         feed0 = np.where(m > 0, F[:, 0], self._last).astype(np.int32)
         feed_next = np.zeros((Q, S), np.int32)
         feed_next[: Q - 1] = F[:, 1:].T
+        poison = np.zeros((Q, S), np.float32)
+        if self._faulty:
+            for slot, req in self.residents.items():
+                if not active[slot]:
+                    continue
+                t = int(self._t[slot])
+                p0s = int(self._p0[slot])
+                for q in range(int(adv[slot])):
+                    count = t + q + 1 - p0s  # token index sampled at step q
+                    if count >= req.n_emitted and count >= 0:
+                        # only NEW emissions are poison targets: refeed
+                        # steps re-derive already-kept tokens from the
+                        # feed, so poisoning them couldn't change outputs
+                        poison[q, slot] = self.injector.poison_value(
+                            req.rid, count, req.quarantines
+                        )
         covered = int(max(
             (math.ceil((int(self._t[s]) + int(adv[s])) / page)
              for s in self.residents if adv[s] > 0),
@@ -881,22 +1073,43 @@ class PagedServeEngine:
         pv = _pow2_bucket(max(covered, 1), self._pages_max)
         table = jnp.asarray(self._table[:, :pv])
         quantum, _, _, _, _, _ = self._ops()
-        with self.ctx.scope():
-            toks, emits, self._phys, self._pinned = quantum(
-                self.params, self._phys, self._pinned, self._shared, table,
-                jnp.asarray(feed0), jnp.asarray(feed_next),
-                jnp.asarray(m), jnp.asarray(adv),
-                jnp.asarray(self._t, jnp.int32),
-                jnp.asarray(self._p0, jnp.int32),
-                jnp.asarray(active), jnp.asarray(temps), jnp.asarray(topks),
-                jnp.asarray(rids), self._base_key,
-                cfg=self.cfg, ctx=self.ctx, dtype=self.scfg.cache_dtype,
-                spec=self.spec, quantum=Q,
-                sampled=bool((temps[active] > 0.0).any()),
-                truncated=bool((topks[active] > 0).any()),
-            )
+        attempt = [0]
+
+        def dispatch():
+            a = attempt[0]
+            attempt[0] += 1
+            if self.injector is not None:
+                # raises BEFORE the jitted call dispatches: a failed
+                # attempt never consumes the donated pool buffers
+                self.injector.check_step(self._tick, a)
+            with self.ctx.scope():
+                return quantum(
+                    self.params, self._phys, self._pinned, self._shared,
+                    table,
+                    jnp.asarray(feed0), jnp.asarray(feed_next),
+                    jnp.asarray(m), jnp.asarray(adv),
+                    jnp.asarray(self._t, jnp.int32),
+                    jnp.asarray(self._p0, jnp.int32),
+                    jnp.asarray(active), jnp.asarray(temps),
+                    jnp.asarray(topks),
+                    jnp.asarray(rids), self._base_key,
+                    jnp.asarray(poison),
+                    cfg=self.cfg, ctx=self.ctx, dtype=self.scfg.cache_dtype,
+                    spec=self.spec, quantum=Q,
+                    sampled=bool((temps[active] > 0.0).any()),
+                    truncated=bool((topks[active] > 0).any()),
+                    faulty=self._faulty,
+                )
+
+        toks, emits, finite, self._phys, self._pinned = retry(
+            dispatch, attempts=self.scfg.step_retry_attempts,
+            base_delay=self.scfg.step_retry_base_delay,
+            exceptions=(TransientStepError,),
+        )
+        self.n_retried += attempt[0] - 1
         toks = np.asarray(toks)
         emits = np.asarray(emits)
+        finite = np.asarray(finite)
         for slot in sorted(list(self.residents)):
             req = self.residents[slot]
             if not active[slot]:
@@ -905,8 +1118,10 @@ class PagedServeEngine:
             a = int(adv[slot])
             t0 = int(self._t[slot])
             p0 = int(self._p0[slot])
+            col = finite[:a, slot]
+            bad = None if col.all() else int(np.argmax(~col))
             done = False
-            for q in range(a):
+            for q in range(a if bad is None else bad):
                 if not emits[q, slot]:
                     continue
                 count = t0 + q + 1 - p0
@@ -923,6 +1138,13 @@ class PagedServeEngine:
                     break
             if done:
                 self._finish_slot(slot)
+                continue
+            if bad is not None:
+                # non-finite logits at step ``bad``: tokens before it are
+                # kept, everything after is garbage.  The slot's cursors
+                # are left as-is — _process_quarantine releases the slot
+                # (or fails the request) right after this loop.
+                self._pending_quarantine.append(req.rid)
                 continue
             self._t[slot] = t0 + a
             if emits[a - 1, slot]:
@@ -991,7 +1213,7 @@ class PagedServeEngine:
         live |= {r.rid for r in self.residents.values()}
         for rid in [r for r in self._requests if r not in live]:
             req = self._requests.pop(rid)
-            self._results[rid] = np.asarray(req.tokens, np.int32)
+            self._finalize(req, "completed")
             self._prio.pop(rid, None)
             self._deadline.pop(rid, None)
 
@@ -1020,16 +1242,17 @@ class PagedServeEngine:
 
             def quantum_impl(params, phys, pinned, shared, table, feed0,
                              feed_next, m, adv, t0, p0, active, temps,
-                             topks, rids, base_key, *, cfg, ctx, dtype,
-                             spec, quantum, sampled, truncated):
-                toks, emits, ph, pi = _paged_quantum_impl(
+                             topks, rids, base_key, poison, *, cfg, ctx,
+                             dtype, spec, quantum, sampled, truncated,
+                             faulty=False):
+                toks, emits, finite, ph, pi = _paged_quantum_impl(
                     params, cphys(phys), cpin(pinned), shared, table,
                     feed0, feed_next, m, adv, t0, p0, active, temps,
-                    topks, rids, base_key, cfg=cfg, ctx=ctx, dtype=dtype,
-                    spec=spec, quantum=quantum, sampled=sampled,
-                    truncated=truncated,
+                    topks, rids, base_key, poison, cfg=cfg, ctx=ctx,
+                    dtype=dtype, spec=spec, quantum=quantum,
+                    sampled=sampled, truncated=truncated, faulty=faulty,
                 )
-                return toks, emits, cphys(ph), cpin(pi)
+                return toks, emits, finite, cphys(ph), cpin(pi)
 
             def copy_impl(phys, src, dst, *, spec):
                 return cphys(_copy_blocks_impl(cphys(phys), src, dst,
@@ -1053,7 +1276,7 @@ class PagedServeEngine:
                     quantum_impl,
                     static_argnames=(
                         "cfg", "ctx", "dtype", "spec", "quantum",
-                        "sampled", "truncated",
+                        "sampled", "truncated", "faulty",
                     ),
                     donate_argnums=(1, 2) if donate else (),
                 ),

@@ -55,10 +55,15 @@ class Request:
     prompt: np.ndarray  # (L,) int32 original prompt
     params: SamplingParams
     stream: Optional[Callable[[int, int, bool], None]] = None  # (rid, tok, done)
+    # tick deadline for the WHOLE request (DESIGN.md §13): if it hasn't
+    # finished by this scheduler tick it aborts with status
+    # "deadline_exceeded" and partial tokens.  None = no deadline.
+    deadline: Optional[int] = None
     # --- schedule state
     tokens: List[int] = dataclasses.field(default_factory=list)  # emitted
     slot: int = -1  # -1 = not resident
     evictions: int = 0
+    quarantines: int = 0  # NaN-quarantine strikes (replays) so far
 
     @property
     def n_emitted(self) -> int:
@@ -80,13 +85,37 @@ class Request:
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class RequestResult:
+    """Terminal outcome of one request (the serve fault contract,
+    DESIGN.md §13).  ``tokens`` always carries whatever the request
+    emitted before the terminal event — partial output on aborts."""
+
+    rid: int
+    status: str  # completed|failed|deadline_exceeded|cancelled|shed
+    tokens: Tuple[int, ...]
+    detail: str = ""
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "completed"
+
+
+TERMINAL_STATUSES = (
+    "completed", "failed", "deadline_exceeded", "cancelled", "shed",
+)
+
+
 class Backend:
     """What the scheduler needs from the model side (implemented by
     :class:`repro.serve.engine.ServeEngine`)."""
 
-    def prefill_into_slot(self, slot: int, req: Request) -> int:
+    def prefill_into_slot(self, slot: int, req: Request) -> Optional[int]:
         """Prefill ``req.resume_prompt``, scatter the cache into ``slot``,
-        and return the first sampled token."""
+        and return the first sampled token — or None if the backend failed
+        the admission structurally (e.g. NaN-quarantine strike-out during
+        prefill); the scheduler then releases the slot and the backend
+        owns finalizing the request."""
         raise NotImplementedError
 
     def decode_active(self, requests: Dict[int, Request]) -> Dict[int, list]:
@@ -193,6 +222,13 @@ class Scheduler:
             req.slot = slot
             by_rid[req.rid] = req
             first = backend.prefill_into_slot(slot, req)
+            if first is None:
+                # structural admission failure (e.g. prefill NaN-quarantine
+                # strike-out): free the slot; the backend finalizes the
+                # request with its structured RequestResult
+                self._release(slot, backend)
+                req.slot = -1
+                continue
             self._emit(req, first, backend, events)
         # 2. one decode quantum over every active slot; a request that hits
         # its stop condition mid-quantum keeps tokens up to (and including)

@@ -1,4 +1,4 @@
-"""Priority/SLO-aware admission (DESIGN.md §11).
+"""Priority/SLO-aware admission (DESIGN.md §11, §13).
 
 Replaces FIFO admission for the paged engine: requests carry a priority
 class and an optional deadline, and the queue orders admission by
@@ -20,6 +20,13 @@ Deadlines are scheduler ticks (engine steps), not wall seconds: the engine
 has no clock of its own, and tick-denominated deadlines keep schedules
 deterministic and replayable.  ``None`` means "no deadline" and sorts last
 within a priority class.
+
+Removal (cancellation, deadline aborts, load shedding) is *lazy*: a
+removed rid lands in a tombstone set and its heap/deque entry is skipped —
+and discarded — when it reaches the front, so ``remove`` is O(1) and
+``pop``/``peek`` stay O(log n) amortized.  The old implementation rebuilt
+the whole heap per removal (O(n) + heapify), which made cancellation
+storms quadratic.
 """
 from __future__ import annotations
 
@@ -30,69 +37,110 @@ from typing import Iterator, Optional, Tuple
 
 
 class SLOQueue:
-    """Admission queue: readmit deque + (priority, deadline, seq) heap."""
+    """Admission queue: readmit deque + (priority, deadline, seq) heap,
+    with lazy-tombstone removal."""
 
     def __init__(self) -> None:
         self._heap: list = []  # (-priority, deadline, seq, rid)
         self._readmit: deque = deque()  # rids, FIFO
         self._seq = 0
+        self._live: set = set()  # rids currently queued (heap + readmit)
+        self._tombstones: set = set()  # removed rids whose entries remain
 
     def __len__(self) -> int:
-        return len(self._heap) + len(self._readmit)
+        return len(self._live)
 
     def __bool__(self) -> bool:
-        return bool(self._heap) or bool(self._readmit)
+        return bool(self._live)
 
+    # ------------------------------------------------- lazy-removal core
+    def _settle_heap(self) -> None:
+        """Pop tombstoned entries off the heap top (amortized O(log n):
+        each removed entry is popped exactly once, here)."""
+        while self._heap and self._heap[0][3] in self._tombstones:
+            rid = heapq.heappop(self._heap)[3]
+            self._tombstones.discard(rid)
+
+    def _settle_readmit(self) -> None:
+        while self._readmit and self._readmit[0] in self._tombstones:
+            self._tombstones.discard(self._readmit.popleft())
+
+    # ------------------------------------------------------------- push
     def push(self, rid: int, priority: int = 0,
              deadline: Optional[int] = None) -> None:
         key = math.inf if deadline is None else float(deadline)
         heapq.heappush(self._heap, (-int(priority), key, self._seq, rid))
         self._seq += 1
+        self._live.add(rid)
+        self._tombstones.discard(rid)
 
     def push_readmit(self, rid: int) -> None:
         """Re-enter a preempted request AHEAD of every queued arrival
         (relative readmit order preserved — FIFO among the preempted)."""
         self._readmit.append(rid)
+        self._live.add(rid)
+        self._tombstones.discard(rid)
 
+    # ------------------------------------------------------------ peeks
     def peek(self) -> Optional[Tuple[int, bool]]:
         """(rid, is_readmit) of the next admission candidate, or None."""
+        self._settle_readmit()
         if self._readmit:
             return self._readmit[0], True
+        self._settle_heap()
         if self._heap:
             return self._heap[0][3], False
         return None
 
     def pop(self) -> Optional[int]:
+        self._settle_readmit()
         if self._readmit:
-            return self._readmit.popleft()
+            rid = self._readmit.popleft()
+            self._live.discard(rid)
+            return rid
+        self._settle_heap()
         if self._heap:
-            return heapq.heappop(self._heap)[3]
+            rid = heapq.heappop(self._heap)[3]
+            self._live.discard(rid)
+            return rid
         return None
 
     def peek_priority(self) -> Optional[int]:
         """Priority of the best queued (non-readmit) arrival — the
         preemption trigger compares this against resident priorities.
         Readmitted requests never trigger further preemption (one-way)."""
+        self._settle_heap()
         if self._heap:
             return -self._heap[0][0]
         return None
 
     def rids(self) -> Iterator[int]:
-        yield from self._readmit
+        for rid in self._readmit:
+            if rid not in self._tombstones:
+                yield rid
         for _, _, _, rid in sorted(self._heap):
-            yield rid
+            if rid not in self._tombstones:
+                yield rid
 
+    # --------------------------------------------------------- removal
     def remove(self, rid: int) -> bool:
-        """Drop a queued request (cancellation); O(n), rare path."""
-        try:
-            self._readmit.remove(rid)
-            return True
-        except ValueError:
-            pass
-        for i, ent in enumerate(self._heap):
-            if ent[3] == rid:
-                self._heap[i] = self._heap[-1]
-                self._heap.pop()
-                heapq.heapify(self._heap)
-                return True
-        return False
+        """Drop a queued request (cancellation / deadline abort / load
+        shedding).  O(1): the entry is tombstoned and skipped when it
+        surfaces.  Returns False if ``rid`` is not queued."""
+        if rid not in self._live:
+            return False
+        self._live.discard(rid)
+        self._tombstones.add(rid)
+        return True
+
+    def worst(self) -> Optional[int]:
+        """The weakest queued *arrival* — lowest priority, then latest
+        deadline (no deadline sorts last), then newest — the load-shedding
+        victim under overload (DESIGN.md §13).  Readmitted requests are
+        never shed (they already did work worth preserving); returns None
+        if only readmits are queued.  O(n) scan, but shedding only runs
+        past the overload threshold."""
+        live = [e for e in self._heap if e[3] in self._live]
+        if not live:
+            return None
+        return max(live)[3]

@@ -43,7 +43,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.data import lm_data
 from repro.train import checkpoint as ckpt
-from repro.train import ft
+from repro.common import ft
 from repro.train.trainer import (
     TrainConfig,
     abstract_train_state,

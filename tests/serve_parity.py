@@ -339,6 +339,229 @@ def check_paged_schedule(arch, seed, *, ectx=None, param_axes=None):
     return got, rid_of, scfg
 
 
+# ------------------------------------------------------------ chaos harness
+#
+# The serve fault contract (DESIGN.md §13), proved under *injected* faults:
+# with deterministic, seeded NaN/Inf logit poisoning, transient step and
+# prefill errors, allocator exhaustion, deadlines, cancellations, and load
+# shedding all active at once, every submitted request must reach exactly
+# one structured terminal RequestResult; completed requests must be token-
+# identical to the fault-free sequential reference (exact on the dense
+# engine, tie-aware on the paged engine's chunked prefill); "failed" may
+# only arise from quarantine strike-out; and the drained engine's pools
+# must be fully free (no leaked slots, blocks, refcounts, or radix pins).
+
+from repro.serve.engine import ServeEngine as _ServeEngine  # noqa: E402
+from repro.serve.faults import (  # noqa: E402
+    FaultInjector,
+    FaultPlan,
+    TransientStepError,
+)
+from repro.serve.scheduler import SamplingParams, TERMINAL_STATUSES  # noqa: E402
+
+CHAOS_MAX_STEPS = 800
+
+
+def make_chaos_plan(rng, vocab):
+    """Randomized adversarial scenario: mixed requests (greedy/sampled,
+    priorities, some with tick deadlines, some scheduled for mid-flight
+    cancellation) plus a seeded FaultPlan drawing every injectable fault
+    kind at random rates."""
+    n_req = int(rng.integers(3, 6))
+    reqs = []
+    for _ in range(n_req):
+        sampled = rng.random() < 0.3
+        reqs.append({
+            "arrival": int(rng.integers(0, 6)),
+            "prompt": rng.integers(
+                0, vocab, size=int(rng.integers(3, 9))
+            ).astype(np.int32),
+            "max_new": int(rng.integers(1, H_MAX + 1)),
+            "stop": tuple(
+                int(t) for t in rng.integers(0, vocab, size=2)
+            ) if rng.random() < 0.3 else (),
+            "temperature": 0.7 if sampled else 0.0,
+            "top_k": 4 if (sampled and rng.random() < 0.5) else 0,
+            "priority": int(rng.integers(0, 3)),
+            # relative to the submission tick; None = no deadline
+            "deadline_rel": int(rng.integers(2, 10))
+            if rng.random() < 0.25 else None,
+            "cancel_after": int(rng.integers(1, 5))
+            if rng.random() < 0.25 else None,
+        })
+    reqs.sort(key=lambda p: p["arrival"])
+    fault = dict(
+        seed=int(rng.integers(0, 1 << 31)),
+        nan_logit_rate=float(rng.choice([0.0, 0.05, 0.15])),
+        inf_logit_rate=float(rng.choice([0.0, 0.05])),
+        step_error_rate=float(rng.choice([0.0, 0.1, 0.25])),
+        prefill_error_rate=float(rng.choice([0.0, 0.1])),
+        alloc_fail_rate=float(rng.choice([0.0, 0.2])),
+    )
+    scfg = dataclasses.replace(
+        SCFG,
+        decode_quantum=int(rng.integers(1, 4)),
+        overload_threshold=int(rng.choice([0, 0, 3])),
+        step_retry_attempts=3,
+    )
+    pcfg = PagedConfig(page_size=int(rng.choice([2, 4])),
+                       prefix_cache=bool(rng.random() < 0.8))
+    return reqs, fault, scfg, pcfg
+
+
+def run_chaos_plan(eng, reqs, max_steps=CHAOS_MAX_STEPS):
+    """Drive arrivals + scheduled cancellations until drained, absorbing
+    retry-exhausted TransientStepErrors (the engine is left consistent, so
+    the next step resumes).  Returns rid -> plan entry."""
+    paged = hasattr(eng, "alloc")
+    pending = list(reqs)
+    rid_of, cancels = {}, []
+    t = 0
+
+    def idle():
+        return eng.idle if paged else eng.scheduler.idle
+
+    while pending or not idle():
+        while pending and pending[0]["arrival"] <= t:
+            p = pending.pop(0)
+            kw = dict(
+                max_new_tokens=p["max_new"], stop_tokens=p["stop"],
+                temperature=p["temperature"], top_k=p["top_k"],
+            )
+            if p["deadline_rel"] is not None:
+                kw["deadline"] = eng._tick + p["deadline_rel"]
+            if paged:
+                kw["priority"] = p["priority"]
+            rid = eng.submit(p["prompt"], **kw)
+            rid_of[rid] = p
+            if p["cancel_after"] is not None:
+                cancels.append([t + p["cancel_after"], rid])
+        for c in [c for c in cancels if c[0] <= t]:
+            eng.cancel(c[1])
+            cancels.remove(c)
+        try:
+            eng.step()
+        except TransientStepError:
+            pass  # bounded retries exhausted this tick; state consistent
+        t += 1
+        assert t < max_steps, "chaos schedule failed to drain"
+    return rid_of
+
+
+def _check_chaos_results(eng, rid_of, cfg, params, scfg, paged, label):
+    finals = eng.request_results()
+    for rid, p in rid_of.items():
+        assert rid in finals, f"{label}: rid {rid} has no terminal result"
+        res = finals[rid]
+        assert res.status in TERMINAL_STATUSES, res
+        sp = SamplingParams(
+            max_new_tokens=p["max_new"], temperature=p["temperature"],
+            top_k=p["top_k"], stop_tokens=p["stop"],
+        )
+        want, gaps = paged_reference(cfg, params, scfg, p["prompt"], sp, rid)
+        got = [int(x) for x in res.tokens]
+        rlabel = f"{label} rid={rid} status={res.status}"
+        if res.status == "completed":
+            # token-identical to the fault-free sequential reference —
+            # injected faults on THIS request were healed by retry /
+            # quarantine-replay, and faults on batch neighbors never
+            # leak across slots
+            if paged:
+                compare_request(got, want, gaps, rlabel)
+            else:
+                assert got == want, f"{rlabel}: {got} != {want}"
+        else:
+            # structured terminations carry a partial prefix of the
+            # reference stream (exact on dense; prefix-compared
+            # tie-aware on paged)
+            if res.status == "failed":
+                assert eng.n_quarantined > 0, (
+                    f"{rlabel}: failed without any quarantine"
+                )
+            if paged:
+                for i, g in enumerate(got):
+                    if g != want[i]:
+                        assert gaps[i] < TIE_TOL, (
+                            f"{rlabel}: partial token {i} diverged"
+                        )
+                        break
+            else:
+                assert got == want[: len(got)], (
+                    f"{rlabel}: partial tokens {got} not a prefix of "
+                    f"{want}"
+                )
+    return finals
+
+
+def check_chaos_schedule(arch, seed, *, paged=False, ectx=None,
+                         param_axes=None):
+    """One randomized chaos schedule on a freshly built engine; asserts
+    the full serve fault contract, then the clean-pool invariants.
+    Returns (injector.fired counts, rid -> RequestResult)."""
+    cfg, params, axes = setup(arch)
+    rng = np.random.default_rng(seed)
+    reqs, fault, scfg, pcfg = make_chaos_plan(rng, cfg.vocab_size)
+    inj = FaultInjector(FaultPlan(**fault))
+    if paged:
+        eng = PagedServeEngine(
+            params, cfg, scfg, pcfg, injector=inj, ectx=ectx,
+            param_axes=param_axes if ectx is not None else None,
+        )
+    else:
+        eng = _ServeEngine(
+            params, cfg, scfg, injector=inj, ectx=ectx,
+            param_axes=param_axes if ectx is not None else None,
+        )
+    rid_of = run_chaos_plan(eng, reqs)
+    label = (f"{arch} seed={seed} paged={paged} q={scfg.decode_quantum} "
+             f"fault={fault}")
+    finals = _check_chaos_results(eng, rid_of, cfg, params, scfg, paged,
+                                  label)
+    # post-drain: no leaked slots / blocks / refcounts / radix pins
+    if paged:
+        eng.flush_prefix()
+        eng.check_clean()
+    else:
+        assert eng.scheduler.idle
+        assert len(eng.scheduler._free) == scfg.n_slots, "leaked slots"
+        assert_pool_zeroed(eng)
+    return inj.fired, finals
+
+
+def compare_chaos_mesh(arch, seed, n_data=2, n_model=4):
+    """The same chaos schedule meshless vs mesh-native (dense engine):
+    identical injected fault streams on both sides, so every request's
+    terminal status AND tokens must match exactly."""
+    cfg, params, axes = setup(arch)
+    rng = np.random.default_rng(seed)
+    reqs, fault, scfg, _ = make_chaos_plan(rng, cfg.vocab_size)
+
+    single = _ServeEngine(params, cfg, scfg,
+                          injector=FaultInjector(FaultPlan(**fault)))
+    rid_single = run_chaos_plan(single, reqs)
+    got_single = single.request_results()
+
+    mesh = make_debug_mesh(n_data, n_model)
+    ectx = ExecutionContext(mesh=mesh)
+    meshed = _ServeEngine(params, cfg, scfg, ectx=ectx, param_axes=axes,
+                          injector=FaultInjector(FaultPlan(**fault)))
+    rid_mesh = run_chaos_plan(meshed, reqs)
+    got_mesh = meshed.request_results()
+
+    assert set(rid_single) == set(rid_mesh)
+    assert set(got_single) == set(got_mesh)
+    for rid in got_single:
+        a, b = got_single[rid], got_mesh[rid]
+        assert (a.status, a.tokens) == (b.status, b.tokens), (
+            f"{arch} seed={seed}: rid {rid} diverged on the mesh under "
+            f"chaos: {(b.status, b.tokens)} != {(a.status, a.tokens)}"
+        )
+    for eng in (single, meshed):
+        assert eng.scheduler.idle
+        assert_pool_zeroed(eng)
+    return len(got_single)
+
+
 def compare_paged_mesh(arch, seed, n_data=2, n_model=4,
                        expect_sharded=True):
     """The same randomized paged schedule on a debug mesh vs meshless:

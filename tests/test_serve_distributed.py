@@ -138,3 +138,55 @@ for _arch, _nd, _nm in (("hyena-153m", 2, 4), ("phi4-mini-3.8b", 4, 2)):
     _t = _make_paged_property(_arch, _nd, _nm)
     globals()[_t.__name__] = _t
 del _t
+
+
+# ---------------------------------------------------------------- chaos
+#
+# The serve fault contract on a mesh (DESIGN.md §13): the SAME chaos
+# schedule — seeded NaN/Inf poisoning, transient errors, deadlines,
+# cancellations — on a meshless vs a 2×4 mesh engine must produce
+# identical terminal statuses AND tokens for every request (fault coins
+# are drawn host-side from the schedule, never from device state).
+
+def test_mesh_chaos_fixed_schedule():
+    """Fast-tier pin: one fixed chaos schedule on hyena, mesh vs
+    meshless, identical structured outcomes."""
+    out = run_subprocess("""
+        import serve_parity
+        n = serve_parity.compare_chaos_mesh("hyena-153m", seed=7)
+        print("OK", n, "requests")
+    """)
+    assert "OK" in out
+
+
+def _make_chaos_property(arch, n_data, n_model):
+    def harness():
+        out = run_subprocess(f"""
+            import numpy as np
+            import serve_parity
+            rng = np.random.default_rng(13)
+            for ex in range({N_EXAMPLES}):
+                seed = int(rng.integers(0, 1 << 30))
+                try:
+                    serve_parity.compare_chaos_mesh(
+                        "{arch}", seed, n_data={n_data}, n_model={n_model},
+                    )
+                except Exception as e:
+                    raise AssertionError(
+                        f"mesh chaos parity failed on example {{ex}} "
+                        f"(seed {{seed}}): {{e}}"
+                    ) from e
+            print("OK")
+        """)
+        assert "OK" in out
+
+    harness.__name__ = (
+        f"test_mesh_chaos_randomized_{arch.replace('-', '_')}"
+    )
+    return pytest.mark.slow(harness)
+
+
+for _arch, _nd, _nm in (("hyena-153m", 2, 4), ("phi4-mini-3.8b", 4, 2)):
+    _t = _make_chaos_property(_arch, _nd, _nm)
+    globals()[_t.__name__] = _t
+del _t

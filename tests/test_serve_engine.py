@@ -405,6 +405,18 @@ def test_drain_budget_raises_with_partial_results(paged):
     assert err.max_steps == 1 and err.active == (rid,)
     assert rid in err.partial and len(err.partial[rid]) < 4
     assert "still active" in str(err)
+    # budget exhaustion must not leak: the still-active request was
+    # evicted to the readmit queue and its slot/blocks released BEFORE
+    # the raise — the pool is fully free (radix-held blocks excepted,
+    # reclaimed by flush_prefix)
+    if paged:
+        assert not eng.residents
+        eng.flush_prefix()
+        assert eng.alloc.n_free == eng.alloc.n_blocks - 1, "leaked blocks"
+        assert not eng.alloc.ref.any(), "leaked refcounts"
+    else:
+        assert not eng.scheduler.active
+        serve_parity.assert_pool_zeroed(eng)
     out = eng.drain()  # resumes exactly where the budget cut off
     ref = np.asarray(generate(
         params, cfg, jnp.asarray(prompt[None]), scfg=serve_parity.SCFG,
@@ -513,3 +525,314 @@ def test_paged_submit_validation():
         eng.submit(np.arange(MAX_LEN), max_new_tokens=1)
     eng.submit(np.arange(4), max_new_tokens=4)  # exactly 2 blocks: fits
     eng.drain()
+
+
+# ---------------------------------------------------------------- faults
+#
+# The serve fault contract (DESIGN.md §13): deterministic seeded fault
+# injection (NaN/Inf logit poisoning, transient step/prefill errors,
+# allocator exhaustion), NaN-quarantined decode with evict-replay,
+# request lifecycle guards (cancel / deadline / shed), and the chaos
+# property harness shared with the distributed suite via serve_parity.
+from repro.serve.faults import FaultInjector, FaultPlan, TransientStepError
+from repro.serve.scheduler import TERMINAL_STATUSES
+
+
+def _build(arch, paged, scfg=None, pcfg=None, injector=None):
+    if paged:
+        cfg, params, _ = serve_parity.setup(arch)
+        eng = PagedServeEngine(params, cfg, scfg or serve_parity.SCFG,
+                               pcfg or PCFG, injector=injector)
+    else:
+        cfg, params = setup(arch)
+        eng = ServeEngine(params, cfg, scfg or SCFG, injector=injector)
+    return cfg, params, eng
+
+
+@pytest.mark.parametrize("arch", HARNESS_ARCHS)
+@pytest.mark.parametrize("paged", [False, True])
+def test_quarantine_replay_token_identical(arch, paged):
+    """A request whose decode logits are NaN-poisoned is quarantined
+    (blocks/slot released) and replayed from its last good token; the
+    replayed stream AND the unfaulted neighbor's sampled stream are
+    bit-identical to the fault-free engine run — schedule-independent
+    (seed, rid, token-index) key streams make the replay exact, and
+    per-slot batch independence keeps the poison out of neighbor
+    caches."""
+    prompts = {
+        0: np.array([3, 5, 7, 2], np.int32),
+        1: np.array([4, 1, 6], np.int32),
+    }
+    outs = {}
+    for faulted in (False, True):
+        inj = FaultInjector(FaultPlan(
+            poison_tokens=((0, 1, "nan"),)
+        )) if faulted else None
+        cfg, params, eng = _build(arch, paged, injector=inj)
+        r0 = eng.submit(prompts[0], max_new_tokens=4)
+        r1 = eng.submit(prompts[1], max_new_tokens=4, temperature=0.8,
+                        top_k=8)
+        out = eng.drain()
+        outs[faulted] = {r: [int(t) for t in out[r]] for r in (r0, r1)}
+        if faulted:
+            assert eng.n_quarantined == 1 and inj.fired["nan"] >= 1
+            assert eng.result(r0).status == "completed"
+            assert eng.result(r1).status == "completed"
+        if paged:
+            eng.flush_prefix()
+            eng.check_clean()
+        else:
+            serve_parity.assert_pool_zeroed(eng)
+    assert outs[True] == outs[False], (
+        f"{arch} paged={paged}: replayed run diverged from fault-free: "
+        f"{outs[True]} != {outs[False]}"
+    )
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_quarantine_strikes_out_structurally(paged):
+    """Persistent poison (every replay re-poisoned) exhausts
+    quarantine_strikes: the request fails with a structured result
+    carrying its last-good partial tokens, and the pool comes back
+    clean."""
+    prompt = np.array([3, 5, 7, 2], np.int32)
+    cfg, params, eng = _build("hyena-153m", paged)
+    r = eng.submit(prompt, max_new_tokens=4)
+    base = [int(t) for t in eng.drain()[r]]
+
+    inj = FaultInjector(FaultPlan(
+        poison_tokens=((0, 1, "inf"),), poison_attempts=99,
+    ))
+    cfg, params, eng = _build("hyena-153m", paged, injector=inj)
+    r = eng.submit(prompt, max_new_tokens=4)
+    eng.drain()
+    res = eng.result(r)
+    assert res.status == "failed" and not res.ok
+    assert "quarantine" in res.detail
+    assert list(res.tokens) == base[:1]  # last-good prefix, poison at t=1
+    assert eng.n_quarantined == eng.scfg.quarantine_strikes
+    if paged:
+        eng.flush_prefix()
+        eng.check_clean()
+    else:
+        serve_parity.assert_pool_zeroed(eng)
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_transient_faults_absorbed_by_retry(paged):
+    """Transient step/prefill errors (and paged allocator exhaustion) are
+    retried with bounded backoff; retry-exhausted ticks surface
+    TransientStepError to the caller but leave the engine consistent —
+    the drained output is still token-identical to the fault-free run."""
+    prompt = np.array([3, 5, 7, 2], np.int32)
+    cfg, params, eng = _build("hyena-153m", paged)
+    r = eng.submit(prompt, max_new_tokens=4)
+    base = [int(t) for t in eng.drain()[r]]
+
+    plan = FaultPlan(step_error_rate=0.4, prefill_error_rate=0.3,
+                     alloc_fail_rate=0.3 if paged else 0.0, seed=3)
+    inj = FaultInjector(plan)
+    cfg, params, eng = _build("hyena-153m", paged, injector=inj)
+    r = eng.submit(prompt, max_new_tokens=4)
+    for _ in range(300):
+        try:
+            eng.step()
+        except TransientStepError:
+            pass
+        if (eng.idle if paged else eng.scheduler.idle):
+            break
+    assert (eng.idle if paged else eng.scheduler.idle), "failed to drain"
+    assert [int(t) for t in eng.results()[r]] == base
+    assert eng.result(r).status == "completed"
+    assert sum(inj.fired.values()) > 0, "no faults actually fired"
+    if paged:
+        eng.flush_prefix()
+        eng.check_clean()
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_cancel_releases_resources_mid_decode(paged):
+    """cancel(rid) mid-decode finalizes the request as "cancelled" with
+    its partial tokens, releases its slot/blocks immediately (a queued
+    neighbor gets admitted), and the drained pool is clean.  Cancelling a
+    queued or finished rid is safe."""
+    cfg, params, eng = _build("hyena-153m", paged)
+    ra = eng.submit(np.array([3, 5, 7, 2], np.int32), max_new_tokens=6)
+    for _ in range(10):  # paged chunked prefill may take several quanta
+        eng.step()
+        if eng._requests[ra].n_emitted:
+            break
+    assert eng.cancel(ra)
+    res = eng.result(ra)
+    assert res.status == "cancelled" and 1 <= len(res.tokens) < 6
+    assert not eng.cancel(ra)  # already terminal
+    rb = eng.submit(np.array([4, 1, 6], np.int32), max_new_tokens=3)
+    assert eng.cancel(eng.submit(np.array([9], np.int32),
+                                 max_new_tokens=2))  # queued, never ran
+    out = eng.drain()
+    ref = np.asarray(generate(
+        params, cfg, jnp.asarray([[4, 1, 6]]),
+        scfg=serve_parity.SCFG if paged else SCFG, max_new_tokens=3,
+    ))[0]
+    assert [int(t) for t in out[rb]] == [int(t) for t in ref[:3]]
+    if paged:
+        eng.flush_prefix()
+        eng.check_clean()
+    else:
+        serve_parity.assert_pool_zeroed(eng)
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_deadline_exceeded_structured(paged):
+    """A request that misses its tick deadline aborts with status
+    "deadline_exceeded" and partial tokens; a deadline already expired at
+    submit finalizes immediately without touching the pool."""
+    cfg, params, eng = _build("hyena-153m", paged)
+    rd = eng.submit(np.array([1, 2, 3], np.int32), max_new_tokens=8,
+                    deadline=eng._tick + 1)
+    eng.step()
+    eng.step()
+    eng.step()
+    res = eng.result(rd)
+    assert res.status == "deadline_exceeded"
+    assert len(res.tokens) < 8  # partial output preserved, never complete
+    re_ = eng.submit(np.array([1, 2], np.int32), max_new_tokens=2,
+                     deadline=0)  # already expired
+    assert eng.result(re_).status == "deadline_exceeded"
+    assert eng.result(re_).tokens == ()
+    eng.drain()
+    if paged:
+        eng.flush_prefix()
+        eng.check_clean()
+    else:
+        serve_parity.assert_pool_zeroed(eng)
+
+
+def test_load_shedding_drops_weakest_paged():
+    """Past overload_threshold queued requests, the paged engine sheds
+    the WEAKEST queued work (lowest priority, latest deadline, newest) —
+    high-priority arrivals are never the victim."""
+    cfg, params, eng = _build(
+        "hyena-153m", True,
+        scfg=dataclasses.replace(serve_parity.SCFG, overload_threshold=4),
+    )
+    prompt = np.array([1, 2, 3], np.int32)
+    lo = eng.submit(prompt, max_new_tokens=4, priority=0)
+    hi = [eng.submit(prompt, max_new_tokens=4, priority=2)
+          for _ in range(4)]  # 5th queued arrival tips the threshold
+    assert eng.result(lo) is not None and eng.result(lo).status == "shed"
+    assert eng.n_shed == 1
+    assert all(eng.result(r) is None for r in hi)  # none shed
+    out = eng.drain()
+    assert all(len(out[r]) == 4 for r in hi)
+    eng.flush_prefix()
+    eng.check_clean()
+
+
+def test_load_shedding_dense_newest():
+    """The dense queue is FIFO (no priorities): overload sheds the newest
+    arrival, never admitted work."""
+    cfg, params, eng = _build(
+        "hyena-153m", False,
+        scfg=dataclasses.replace(SCFG, overload_threshold=1),
+    )
+    prompt = np.array([1, 2, 3], np.int32)
+    rids = [eng.submit(prompt, max_new_tokens=4) for _ in range(2)]
+    # shedding is enforced AT SUBMIT on queue depth: the second arrival
+    # tipped the queue past threshold 1 and was shed immediately
+    eng.step()  # rid 0 admitted into a slot
+    rids += [eng.submit(prompt, max_new_tokens=4) for _ in range(2)]
+    shed = [r for r in rids
+            if eng.result(r) is not None and eng.result(r).status == "shed"]
+    assert shed == [rids[1], rids[3]], shed  # newest queued, never admitted
+    eng.drain()
+    assert eng.result(rids[0]).ok and eng.result(rids[2]).ok
+    serve_parity.assert_pool_zeroed(eng)
+
+
+def test_health_and_heartbeat(tmp_path):
+    """health() exposes the liveness/saturation surface; the heartbeat
+    file is written atomically every tick (see also the atomicity
+    regression in test_train_substrate.py)."""
+    hb = tmp_path / "serve.heartbeat"
+    cfg, params, eng = _build(
+        "hyena-153m", False,
+        scfg=dataclasses.replace(SCFG, heartbeat_path=str(hb)),
+    )
+    assert hb.exists()  # initial beat at construction
+    t0 = hb.read_text()
+    eng.submit(np.array([1, 2, 3], np.int32), max_new_tokens=6)
+    eng.step()
+    h = eng.health()
+    assert h["tick"] == 1 and h["resident"] == 1 and h["queued"] == 0
+    assert h["heartbeat"] == str(hb) and hb.read_text() != t0
+    eng.drain()
+    h = eng.health()
+    assert h["resident"] == 0 and h["finished"] == 1
+    ph = _build("hyena-153m", True)[2].health()
+    assert "free_blocks" in ph and "radix_nodes" in ph
+
+
+def test_slo_queue_tombstones_unit():
+    """Lazy-tombstone removal: remove() is O(1), removed rids never pop,
+    worst() picks the shed victim (lowest priority, latest deadline,
+    newest) and never a readmit."""
+    q = SLOQueue()
+    for i in range(6):
+        q.push(i, priority=i % 3)
+    assert q.remove(3) and not q.remove(3)
+    assert len(q) == 5 and 3 not in list(q.rids())
+    assert 3 not in [q.pop() for _ in range(len(q))]
+    # worst(): priority dominates, then latest deadline, then newest
+    q = SLOQueue()
+    q.push(0, priority=1)
+    q.push(1, priority=0, deadline=9)
+    q.push(2, priority=0)  # no deadline sorts after any deadline
+    q.push(3, priority=0)  # newest among the undeadlined weak
+    assert q.worst() == 3
+    q.push_readmit(7)
+    assert q.worst() == 3  # readmits are never shed
+    for r in (3, 2, 1, 0):
+        assert q.remove(r)
+        assert q.worst() not in (r, 7)
+    assert q.worst() is None and q.pop() == 7 and q.pop() is None
+    # interleaved remove/push keeps ordering consistent
+    q = SLOQueue()
+    for i in range(8):
+        q.push(i, priority=0, deadline=i)
+    for i in (0, 2, 4, 6):
+        q.remove(i)
+    q.push(8, priority=1)
+    assert [q.pop() for _ in range(len(q))] == [8, 1, 3, 5, 7]
+
+
+def test_chaos_fixed_seed_dense():
+    """Fast-tier pin: one randomized chaos schedule (poison + transient
+    errors + deadlines + cancels) on the dense engine — every request
+    terminal and structured, completions token-identical, pool clean."""
+    serve_parity.check_chaos_schedule("hyena-153m", 7)
+
+
+def test_chaos_fixed_seed_paged():
+    """Fast-tier pin: chaos on the paged engine (adds allocator
+    exhaustion, priorities, chunked-prefill replay)."""
+    serve_parity.check_chaos_schedule("hyena-153m", 11, paged=True)
+
+
+def _make_chaos_harness(arch, paged):
+    @prop.given(seed=prop.integers(0, 1 << 30))
+    def harness(seed):
+        serve_parity.check_chaos_schedule(arch, seed, paged=paged)
+
+    harness.__name__ = (
+        f"test_chaos_randomized_{'paged' if paged else 'dense'}"
+        f"_{arch.replace('-', '_')}"
+    )
+    return pytest.mark.slow(harness)
+
+
+for _arch in HARNESS_ARCHS:
+    for _paged in (False, True):
+        _t = _make_chaos_harness(_arch, _paged)
+        globals()[_t.__name__] = _t
+del _t

@@ -407,3 +407,27 @@ def test_heartbeat_stop_joins_and_restarts(tmp_path):
     hb.start()  # restart: fresh thread + event
     hb.stop()
     assert os.path.exists(path)  # start() beats immediately
+
+
+def test_heartbeat_beat_is_atomic(tmp_path, monkeypatch):
+    """A monitor polling the liveness file must never read a torn/empty
+    beat: the timestamp lands in a tmp file first and os.replace swaps it
+    in, so a crash mid-beat leaves the previous beat intact."""
+    path = tmp_path / "hb"
+    hb = ft.Heartbeat(str(path), interval=99.0)
+    hb.beat()
+    v1 = float(path.read_text())  # full, parseable beat
+    # crash between the tmp write and the swap: the visible file must
+    # still hold the previous (complete) beat, not a partial write
+    def boom(src, dst):
+        raise OSError("simulated crash mid-beat")
+
+    monkeypatch.setattr(os, "replace", boom)
+    with pytest.raises(OSError, match="mid-beat"):
+        hb.beat()
+    assert float(path.read_text()) == v1
+    monkeypatch.undo()
+    hb.beat()
+    assert float(path.read_text()) >= v1
+    # no tmp debris after a successful beat
+    assert [p.name for p in tmp_path.iterdir()] == ["hb"]
