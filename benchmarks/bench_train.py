@@ -141,8 +141,21 @@ def main() -> None:
         print(f"{r['name']:28s} L={r['seq_len']:>7d} cp={r['cp']} "
               f"tok/s={tok} peak_bytes={pk}")
     if args.json:
+        # schema 2: one scalar headline (the executed context-parallel
+        # step's throughput) for perf-trajectory tooling
+        cpP = next((r for r in rows if r["name"] == "train/cpP"), None)
         artifact = {
-            "schema": "repro-bench-train-v1",
+            "schema": 2,
+            "summary": {
+                "train": {
+                    "metric": "train/cpP",
+                    "value": (
+                        None if cpP is None or cpP["tok_s"] is None
+                        else round(cpP["tok_s"], 1)
+                    ),
+                    "unit": "tok_s",
+                },
+            },
             "device": jax.devices()[0].platform,
             "devices": P_sz,
             "tokens_per_chip": args.tokens_per_chip,

@@ -52,11 +52,13 @@ def main() -> None:
 
     rows = []
     errors = []
+    spans = {}  # module -> (start, end) row indices, for the summary block
     print("name,us_per_call,derived")
     for name, mod in modules.items():
         try:
             start = len(rows)
             mod.run(rows)
+            spans[name] = (start, len(rows))
             for r in rows[start:]:
                 print(f"{r[0]},{r[1]:.1f},{r[2]}")
                 sys.stdout.flush()
@@ -68,11 +70,31 @@ def main() -> None:
     if args.json:
         import jax
 
+        # schema 2: one scalar headline metric per suite so perf-trajectory
+        # tooling can plot the history without knowing each suite's row
+        # vocabulary.  A module nominates its headline row via HEADLINE;
+        # otherwise its first row stands in.
+        summary = {}
+        for name, mod in modules.items():
+            start, end = spans.get(name, (0, 0))
+            mod_rows = rows[start:end]
+            if not mod_rows:
+                continue
+            headline = getattr(mod, "HEADLINE", None)
+            pick = next(
+                (r for r in mod_rows if r[0] == headline), mod_rows[0]
+            )
+            summary[name] = {
+                "metric": pick[0],
+                "value": round(float(pick[1]), 1),
+                "unit": "us_per_call",
+            }
         artifact = {
-            "schema": "repro-bench-v1",
+            "schema": 2,
             "backend": jax.default_backend(),
             "device": str(jax.devices()[0]).split(":")[0],
             "modules": sorted(modules),
+            "summary": summary,
             "rows": [
                 {"name": n, "us_per_call": round(t, 1), "derived": str(d)}
                 for n, t, d in rows

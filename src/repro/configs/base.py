@@ -51,6 +51,9 @@ class ModelConfig:
     hyena_sine_freq: float = 14.0
     hyena_decay: tuple = (0.3, 1.5)  # (fast, slow) window decay-rate range
     hyena_max_support: int = 0  # >0: explicit short-FIR ablation
+    # --- Hyena multi-hybrid variants (SE/MR/LI striping, arXiv:2503.01868)
+    hyena_se_len: int = 8  # hyena_se explicit FIR filter length
+    hyena_mr_support: int = 128  # hyena_mr fixed tap-grid support M
     # --- modality frontend stub: first `frontend_len` positions take
     # precomputed embeddings from input_specs() instead of token embeddings.
     frontend: Optional[str] = None  # "vit_stub" | "encodec_stub"
@@ -120,6 +123,8 @@ class ModelConfig:
             local_window=min(self.local_window, 32) if self.local_window else 0,
             hyena_filter_width=16,
             hyena_pos_dim=9,
+            hyena_se_len=4,
+            hyena_mr_support=16,
             frontend_len=8 if self.frontend else 0,
         )
 
@@ -134,6 +139,30 @@ def register(cfg: ModelConfig) -> ModelConfig:
 
     for m in cfg.pattern:
         get_mixer(m)
+    # multi-hybrid pattern rules (DESIGN.md §14): a striping is coherent
+    # only when each variant's support is usable and the tiers are ordered
+    # short < medium — otherwise an "SE-MR" stripe silently degenerates to
+    # two copies of the same operator.
+    if "hyena_se" in cfg.pattern and cfg.hyena_se_len < 2:
+        raise ValueError(
+            f"pattern {cfg.pattern} uses hyena_se but hyena_se_len="
+            f"{cfg.hyena_se_len} < 2"
+        )
+    if "hyena_mr" in cfg.pattern and cfg.hyena_mr_support < 2:
+        raise ValueError(
+            f"pattern {cfg.pattern} uses hyena_mr but hyena_mr_support="
+            f"{cfg.hyena_mr_support} < 2"
+        )
+    if (
+        "hyena_se" in cfg.pattern
+        and "hyena_mr" in cfg.pattern
+        and cfg.hyena_mr_support <= cfg.hyena_se_len
+    ):
+        raise ValueError(
+            f"multi-hybrid pattern {cfg.pattern} needs hyena_mr_support "
+            f"({cfg.hyena_mr_support}) > hyena_se_len ({cfg.hyena_se_len}): "
+            "the medium tier must cover longer lags than the short tier"
+        )
     _REGISTRY[cfg.name] = cfg
     return cfg
 

@@ -112,6 +112,21 @@ def _hyena_lm(name, depth, width, ffn, order=2, vocab=50257):
     ))
 
 
+# StripedHyena-2-style multi-hybrid: short-explicit / medium-regularized /
+# long-implicit hyena stripes plus one attention layer per repeat — the
+# "convolutional multi-hybrid" layer allocation (no single operator wins
+# every range at equal compute).
+HYENA_MH_SMALL = register(ModelConfig(
+    name="hyena-mh-small", family="hybrid",
+    n_layers=8, d_model=512, n_heads=8, n_kv_heads=8, d_ff=1024,
+    vocab_size=50257,
+    pattern=("hyena_se", "hyena_mr", "hyena_li", "attention"),
+    hyena_order=2, hyena_se_len=8, hyena_mr_support=128,
+    hyena_filter_width=64, hyena_filter_depth=4, hyena_pos_dim=65,
+    hyena_sine_freq=14.0, mlp="gelu",
+    source="arXiv:2503.01868",
+))
+
 HYENA_125M = _hyena_lm("hyena-125m", 12, 768, 3072, order=3)
 HYENA_125M_SLIM = _hyena_lm("hyena-125m-slim", 18, 768, 1536, order=3)
 HYENA_153M = _hyena_lm("hyena-153m", 18, 864, 1728, order=2)

@@ -110,10 +110,22 @@ def resolve_conv_backend(
 
     Priority: explicit ``override`` > ``$REPRO_CONV_BACKEND`` > ``default``.
     The resolved name is validated against the registry — unknown names
-    raise immediately (config/launch time) with the registered list.
+    raise immediately (config/launch time), naming the source of the bad
+    name (a typo'd env var should not read like a code bug) and the sorted
+    registered list.
     """
-    name = override or os.environ.get(ENV_VAR) or default
-    get_conv_backend(name)
+    env = os.environ.get(ENV_VAR)
+    if override:
+        name, source = override, "override"
+    elif env:
+        name, source = env, f"${ENV_VAR}"
+    else:
+        name, source = default, "default"
+    if name not in _BACKENDS:
+        raise ValueError(
+            f"unknown conv backend '{name}' (from {source}); registered "
+            f"backends: {sorted(_BACKENDS)}"
+        )
     return name
 
 
@@ -164,6 +176,36 @@ def _blockfft(u, h, skip=None, gate=None):
         if plan:
             factors = tuple(plan["factors"])
     return blockfft_causal_conv(u, h, skip, gate, factors=factors)
+
+
+def _blockfft_overlap(u, h, skip=None, gate=None):
+    from repro.core import autotune
+    from repro.kernels.twolevel_fft import twolevel_candidates, twolevel_fft_conv
+
+    kw = {}
+    if autotune.mode() != "off":
+
+        def run(factors=None, overlap=2, block_d=128):
+            import jax.numpy as jnp
+
+            uu = jnp.ones(u.shape, u.dtype)
+            hh = jnp.ones((u.shape[2], u.shape[1]), jnp.float32)
+            return twolevel_fft_conv(
+                uu, hh,
+                factors=tuple(factors) if factors else None,
+                overlap=overlap, block_d=block_d,
+            )
+
+        plan = autotune.plan_for(
+            "twolevel", u.shape, u.dtype,
+            candidates=twolevel_candidates(u.shape),
+            run=run,
+        )
+        if plan:
+            kw = dict(plan)
+            if "factors" in kw:
+                kw["factors"] = tuple(kw["factors"])
+    return twolevel_fft_conv(u, h, skip, gate, **kw)
 
 
 def _toeplitz(u, h, skip=None, gate=None):
@@ -231,6 +273,16 @@ register_conv_backend(ConvBackend(
     description="four-step (Bailey) FFT with the small DFTs as dense "
     "matmuls — every FLOP on the MXU (H3-style block FFT); factor split "
     "autotunable (core.autotune).",
+))
+register_conv_backend(ConvBackend(
+    name="blockfft_overlap", tag="twolevel_overlap", fn=_blockfft_overlap,
+    supports_gate=True,
+    description="overlapped two-level (inner R / outer S) FFT conv: one "
+    "Pallas call pipelines inner-block DFT accumulation against HBM "
+    "streaming and finalizes twiddle/outer-DFT/pointwise/inverse + the "
+    "fused gate in VMEM (kernels/twolevel_fft.py); (R,S)/overlap/block_d "
+    "autotunable as the 'twolevel' plan kind; off-TPU degrades to the "
+    "identical-math blockfft schedule.",
 ))
 register_conv_backend(ConvBackend(
     name="toeplitz", tag="pallas_mxu", fn=_toeplitz, requires_pallas=True,

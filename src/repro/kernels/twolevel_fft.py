@@ -1,0 +1,291 @@
+"""Overlapped two-level (inner R / outer S) FFT causal-conv Pallas kernel.
+
+The four-step block FFT (``repro.core.blockfft``) already puts every DFT
+FLOP on the MXU; what it leaves on the table is *overlap*: each stage
+(inner R-point DFTs, twiddle, outer S-point DFTs, pointwise filter
+multiply, inverse) runs as a separate XLA op, so the activation makes a
+full HBM round-trip between stages.  This kernel runs the whole two-level
+schedule inside ONE ``pallas_call``:
+
+  * the grid iterates ``(channel_block, r_chunk)`` — Pallas's software
+    pipeline double-buffers the next chunk's HBM→VMEM streams (input slab,
+    DFT column block) against the current chunk's spectrum matmuls, so HBM
+    transfers overlap MXU compute;
+  * ``overlap`` is the pipeline depth: the inner-block DFT is split into
+    ``overlap`` accumulation chunks over the R rows (smaller in-flight
+    transfers, deeper overlap), accumulated into a VMEM spectrum scratch;
+  * on the last chunk the twiddle, outer S-point DFT, pointwise filter
+    multiply, inverse transform, and the gated-fusion finalize (skip-add in
+    fp32 → downcast → gate multiply in the output dtype, the DESIGN.md §7
+    bit-identity policy) all happen in VMEM — the conv output hits HBM
+    exactly once.
+
+Complex arithmetic is carried as explicit (re, im) fp32 planes (Pallas TPU
+has no complex lanes); the filter spectrum is precomputed outside the
+kernel with the same factor split, so the kernel's pointwise stage matches
+``blockfft_causal_conv``'s spectrum layout term for term.
+
+Off-TPU (CI) the same ``(R, S)`` schedule degrades to the plain
+``blockfft`` path — identical math, no interpret-mode timing theater; the
+kernel body itself is pinned by interpret-mode tests on small shapes
+(tests/test_conv_backends_prop.py).  The ``(R, S)`` split, channel tile,
+and overlap depth are autotunable as the ``"twolevel"`` plan kind
+(``core.autotune``; consulted by the ``blockfft_overlap`` registration in
+``core.conv_api``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.blockfft import _dft_mats, _factor, _four_step_fft
+from repro.kernels.platform import on_tpu
+
+
+def _largest_divisor_leq(n: int, k: int) -> int:
+    k = max(1, min(k, n))
+    while n % k:
+        k -= 1
+    return k
+
+
+def twolevel_candidates(shape, limit: int = 3):
+    """Autotune search space for the ``"twolevel"`` plan kind: valid
+    ``(R, S)`` splits of the padded length × overlap depth × channel tile.
+    Every point computes the identical convolution (factor splits
+    reassociate the DFT sums; overlap/tile only re-chunk the schedule), so
+    the search is semantics-preserving by construction — the
+    ``core.autotune`` contract."""
+    from repro.core.blockfft import factor_candidates
+    from repro.core.fftconv import next_fast_len
+
+    B, L, D = shape
+    N = next_fast_len(2 * L - 1)
+    cands = []
+    for R, S in factor_candidates(N, limit=limit):
+        for ov in (2, 4):
+            if R % ov:
+                continue
+            for bd in (64, 128):
+                cands.append(
+                    {"factors": [R, S], "overlap": ov, "block_d": bd}
+                )
+    # degenerate split vocabulary (tiny N): keep at least the default point
+    if not cands:
+        R, S = _factor(N)
+        cands.append({"factors": [R, S], "overlap": 1, "block_d": 128})
+    return cands
+
+
+def _twolevel_kernel(
+    u_ref,       # (B, Rc, S, bd) fp32 — r-chunk of the reshaped padded input
+    frre_c_ref,  # (R, Rc) inner DFT column block for this r-chunk (re)
+    frim_c_ref,  # (R, Rc) (im)
+    frre_ref,    # (R, R) full inner DFT — the inverse needs every column
+    frim_ref,    # (R, R)
+    twre_ref,    # (R, S) twiddle W_N^{k1 s} (re)
+    twim_ref,    # (R, S) (im)
+    fsre_ref,    # (S, S) outer DFT (re)
+    fsim_ref,    # (S, S) (im)
+    hre_ref,     # (R, S, bd) filter spectrum block (re)
+    him_ref,     # (R, S, bd) (im)
+    ui_ref,      # (B, L, bd) fp32 original input (skip term, finalize)
+    skip_ref,    # (1, bd) fp32
+    g_ref,       # (B, L, bd) gate (output dtype; dummy row when ungated)
+    o_ref,       # (B, L, bd) output
+    accre_ref, accim_ref,  # VMEM (B, R, S, bd) fp32 spectrum accumulators
+    *, N: int, L: int, overlap: int, gated: bool,
+):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        accre_ref[...] = jnp.zeros_like(accre_ref)
+        accim_ref[...] = jnp.zeros_like(accim_ref)
+
+    # ---- stage 1 (every pipeline step): inner-DFT accumulation.  The
+    # next chunk's input slab / DFT column block stream HBM→VMEM while
+    # this chunk's matmuls occupy the MXU — the overlap this kernel
+    # exists for.  Real input, so a chunk costs two real matmuls.
+    a = u_ref[...]
+    accre_ref[...] += jnp.einsum(
+        "kr,brsd->bksd", frre_c_ref[...], a,
+        preferred_element_type=jnp.float32,
+    )
+    accim_ref[...] += jnp.einsum(
+        "kr,brsd->bksd", frim_c_ref[...], a,
+        preferred_element_type=jnp.float32,
+    )
+
+    # ---- stages 2–5 (last step only): twiddle → outer DFT → pointwise
+    # filter → inverse transform → gated finalize, all in VMEM.
+    @pl.when(c == overlap - 1)
+    def _finalize():
+        # twiddle W_N^{k1 s} (elementwise complex multiply)
+        twre = twre_ref[...][None, :, :, None]
+        twim = twim_ref[...][None, :, :, None]
+        bre, bim = accre_ref[...], accim_ref[...]
+        ure = bre * twre - bim * twim
+        uim = bre * twim + bim * twre
+        # outer S-point DFT: C[k1, j] = Σ_s U[k1, s] · FS[s, j]
+        fsre, fsim = fsre_ref[...], fsim_ref[...]
+        dot = functools.partial(
+            jnp.einsum, "bksd,sj->bkjd",
+            preferred_element_type=jnp.float32,
+        )
+        cre = dot(ure, fsre) - dot(uim, fsim)
+        cim = dot(ure, fsim) + dot(uim, fsre)
+        # pointwise filter multiply in the spectrum (same layout as
+        # blockfft._four_step_fft: X[k1 + k2·R] = C[k1, k2])
+        hre = hre_ref[...][None]
+        him = him_ref[...][None]
+        yre = cre * hre - cim * him
+        yim = cre * him + cim * hre
+        # inverse outer DFT: D[k1, s] = Σ_j Y[k1, j] · conj(FS)[s, j]
+        idot = functools.partial(
+            jnp.einsum, "bkjd,sj->bksd",
+            preferred_element_type=jnp.float32,
+        )
+        dre = idot(yre, fsre) + idot(yim, fsim)
+        dim = idot(yim, fsre) - idot(yre, fsim)
+        # conjugate twiddle (elementwise)
+        ere = dre * twre + dim * twim
+        eim = dim * twre - dre * twim
+        # inverse inner DFT — conv output is real by construction, so only
+        # the real plane: Re A[r] = Σ_k (FRre[k,r]·Ere[k] + FRim[k,r]·Eim[k])
+        rdot = functools.partial(
+            jnp.einsum, "kr,bksd->brsd",
+            preferred_element_type=jnp.float32,
+        )
+        are = rdot(frre_ref[...], ere) + rdot(frim_ref[...], eim)
+        B = are.shape[0]
+        bd = are.shape[-1]
+        # (B, R, S, bd) row-major == x[r·S + s]: inverse of the forward
+        # reshape, so this is exactly the length-N time axis
+        y = are.reshape(B, N, bd)[:, :L, :] * (1.0 / N)
+        # gated-fusion finalize (fftconv._fused_epilogue policy): skip-add
+        # in fp32, downcast, THEN gate in the output dtype — bit-identical
+        # to the two-pass gate-after schedule
+        y = y + ui_ref[...] * skip_ref[0][None, None, :]
+        y = y.astype(o_ref.dtype)
+        if gated:
+            y = y * g_ref[...].astype(o_ref.dtype)
+        o_ref[...] = y
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("factors", "block_d", "overlap", "interpret"),
+)
+def twolevel_fft_conv(
+    u: jax.Array,  # (B, L, D)
+    h: jax.Array,  # (D, L)
+    skip: Optional[jax.Array] = None,  # (D,)
+    gate: Optional[jax.Array] = None,  # (B, L, D) elementwise output gate
+    *,
+    factors: Optional[Tuple[int, int]] = None,  # autotuned (R, S) split
+    block_d: int = 128,
+    overlap: int = 2,  # inner-DFT pipeline depth (clamped to divide R)
+    interpret: bool | None = None,  # True forces the Pallas body (tests)
+) -> jax.Array:
+    """Two-level overlapped FFT causal conv (ConvBackend contract).
+
+    On TPU (or with ``interpret=True``) runs the single-``pallas_call``
+    pipelined schedule; elsewhere degrades to ``blockfft_causal_conv``
+    with the same ``(R, S)`` split — identical math, so the CPU CI sweep
+    exercises the real schedule's numerics rather than interpret-mode
+    theater.
+    """
+    from repro.core.blockfft import blockfft_causal_conv
+    from repro.core.fftconv import next_fast_len
+
+    B, L, D = u.shape
+    N = next_fast_len(2 * L - 1)
+    if factors is not None and factors[0] * factors[1] != N:
+        factors = None  # stale plan for a different padded length
+    if not (on_tpu() or interpret):
+        return blockfft_causal_conv(u, h, skip, gate, factors=factors)
+
+    R, S, FR, FS, TW = _dft_mats(N, factors)
+    ov = _largest_divisor_leq(R, overlap)
+    bd = max(1, min(block_d, D))
+    pad_d = (-D) % bd
+    out_dtype = u.dtype
+    u32 = u.astype(jnp.float32)
+    h32 = h.astype(jnp.float32)
+    g_in = gate
+    if pad_d:
+        u32 = jnp.pad(u32, ((0, 0), (0, 0), (0, pad_d)))
+        h32 = jnp.pad(h32, ((0, pad_d), (0, 0)))
+        if g_in is not None:
+            g_in = jnp.pad(g_in, ((0, 0), (0, 0), (0, pad_d)))
+    Dp = D + pad_d
+    skip32 = (
+        jnp.zeros((Dp,), jnp.float32) if skip is None
+        else jnp.pad(skip.astype(jnp.float32), (0, pad_d))
+    )
+    # padded input in the (B, R, S, D) four-step layout: x[r·S + s] = A[r, s]
+    up = jnp.pad(u32, ((0, 0), (0, N - L), (0, 0)))
+    u4 = up.reshape(B, R, S, Dp)
+    # filter spectrum, precomputed with the SAME split (one small transform
+    # per call, shared across the batch and the grid)
+    hp = jnp.pad(h32.T, ((0, N - L), (0, 0)))[None]  # (1, N, Dp)
+    H = _four_step_fft(hp, N, (R, S))[0]  # (R, S, Dp) complex64
+    gated = g_in is not None
+    g_arg = g_in if gated else jnp.zeros((B, 1, Dp), out_dtype)
+    Rc = R // ov
+
+    grid = (Dp // bd, ov)
+    out = pl.pallas_call(
+        functools.partial(
+            _twolevel_kernel, N=N, L=L, overlap=ov, gated=gated,
+        ),
+        grid=grid,
+        in_specs=[
+            # r-chunk of the reshaped input (streams in per pipeline step)
+            pl.BlockSpec((B, Rc, S, bd), lambda d, c: (0, c, 0, d)),
+            # inner DFT column block for this r-chunk
+            pl.BlockSpec((R, Rc), lambda d, c: (0, c)),
+            pl.BlockSpec((R, Rc), lambda d, c: (0, c)),
+            # full inner DFT (the inverse at finalize needs every column)
+            pl.BlockSpec((R, R), lambda d, c: (0, 0)),
+            pl.BlockSpec((R, R), lambda d, c: (0, 0)),
+            # twiddle + outer DFT (whole matrices, block-pinned)
+            pl.BlockSpec((R, S), lambda d, c: (0, 0)),
+            pl.BlockSpec((R, S), lambda d, c: (0, 0)),
+            pl.BlockSpec((S, S), lambda d, c: (0, 0)),
+            pl.BlockSpec((S, S), lambda d, c: (0, 0)),
+            # filter spectrum block for this channel tile
+            pl.BlockSpec((R, S, bd), lambda d, c: (0, 0, d)),
+            pl.BlockSpec((R, S, bd), lambda d, c: (0, 0, d)),
+            # original input (skip term) + skip + gate, read at finalize
+            pl.BlockSpec((B, L, bd), lambda d, c: (0, 0, d)),
+            pl.BlockSpec((1, bd), lambda d, c: (0, d)),
+            pl.BlockSpec(
+                (B, L if gated else 1, bd), lambda d, c: (0, 0, d)
+            ),
+        ],
+        out_specs=pl.BlockSpec((B, L, bd), lambda d, c: (0, 0, d)),
+        out_shape=jax.ShapeDtypeStruct((B, L, Dp), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((B, R, S, bd), jnp.float32),
+            pltpu.VMEM((B, R, S, bd), jnp.float32),
+        ],
+        interpret=bool(interpret) if interpret is not None else False,
+    )(
+        u4,
+        jnp.asarray(FR.real), jnp.asarray(FR.imag),
+        jnp.asarray(FR.real), jnp.asarray(FR.imag),
+        jnp.asarray(TW.real), jnp.asarray(TW.imag),
+        jnp.asarray(FS.real), jnp.asarray(FS.imag),
+        jnp.asarray(H.real), jnp.asarray(H.imag),
+        u32[:, :L, :], skip32.reshape(1, -1), g_arg,
+    )
+    if pad_d:
+        out = out[:, :, :D]
+    return out

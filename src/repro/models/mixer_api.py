@@ -48,6 +48,7 @@ def resolve_remat_policy(override: Optional[str] = None) -> str:
 _BUILTIN_MODULES = (
     "repro.models.attention",
     "repro.models.hyena",
+    "repro.models.hyena_variants",
     "repro.models.ssd",
     "repro.models.rglru",
 )

@@ -101,6 +101,48 @@ def test_plan_roundtrip_toeplitz_and_blockfft(plan_env, monkeypatch):
     )
 
 
+def test_plan_roundtrip_twolevel(plan_env, monkeypatch):
+    """The ``"twolevel"`` plan kind (overlapped two-level FFT conv,
+    DESIGN.md §14): search through the registered ``blockfft_overlap``
+    backend persists a {factors, overlap, block_d} plan whose (R, S)
+    split multiplies to the padded length; load returns it without
+    searching; planned output matches the off-mode default schedule."""
+    B, L, D = 1, 64, 8
+    rng = np.random.default_rng(3)
+    u = jnp.asarray(rng.standard_normal((B, L, D)), jnp.float32)
+    h = jnp.asarray(rng.standard_normal((D, L)) / L, jnp.float32)
+    gate = jnp.asarray(rng.standard_normal((B, L, D)), jnp.float32)
+
+    y_search = get_conv_backend("blockfft_overlap")(u, h, None, gate)
+
+    plans = json.loads(plan_env.read_text())
+    key = autotune.plan_key("twolevel", (B, L, D), jnp.float32)
+    assert key in plans, sorted(plans)
+    plan = plans[key]
+    assert set(plan) == {"factors", "overlap", "block_d"}, plan
+    R, S = plan["factors"]
+    from repro.core.fftconv import next_fast_len
+    assert R * S == next_fast_len(2 * L - 1), plan
+    assert plan["overlap"] >= 1 and plan["block_d"] >= 1
+
+    # load mode (fresh in-memory cache) reuses the persisted plan
+    _set_mode(monkeypatch, "load")
+    loaded = autotune.plan_for(
+        "twolevel", (B, L, D), jnp.float32,
+        candidates=[{"factors": [2, 2], "overlap": 1, "block_d": 1}],
+        run=lambda **kw: (_ for _ in ()).throw(AssertionError("searched")),
+    )
+    assert loaded == plan
+    y_load = get_conv_backend("blockfft_overlap")(u, h, None, gate)
+    _set_mode(monkeypatch, "off")
+    y_off = get_conv_backend("blockfft_overlap")(u, h, None, gate)
+    np.testing.assert_array_equal(np.asarray(y_search), np.asarray(y_load))
+    # a different factor split reassociates the DFT sums — allclose
+    np.testing.assert_allclose(
+        np.asarray(y_load), np.asarray(y_off), rtol=1e-4, atol=1e-4
+    )
+
+
 def test_load_mode_never_searches(plan_env, monkeypatch):
     _set_mode(monkeypatch, "load")
 

@@ -25,36 +25,43 @@ from repro.core.conv_api import get_conv_backend, registered_conv_backends
 LENGTHS = (1, 2, 3, 5, 7, 13, 16, 31, 33, 37, 48, 61, 64, 97, 127, 128)
 
 
-def _run_all_backends(B, L, D, seed, with_skip, with_gate=False):
+def _run_all_backends(B, L, D, seed, with_skip, with_gate=False,
+                      dtype=jnp.float32):
     rng = np.random.default_rng(seed)
-    u = jnp.asarray(rng.standard_normal((B, L, D)), jnp.float32)
+    # bf16 inputs round identically for every backend, but each backend
+    # reassociates its fp32 internals differently before the downcast
+    tol = 5e-3 if dtype == jnp.float32 else 4e-2
+    u = jnp.asarray(rng.standard_normal((B, L, D)), dtype)
     h = jnp.asarray(rng.standard_normal((D, L)) / max(L, 1), jnp.float32)
     skip = (
         jnp.asarray(rng.standard_normal((D,)), jnp.float32)
         if with_skip else None
     )
     gate = (
-        jnp.asarray(rng.standard_normal((B, L, D)), jnp.float32)
+        jnp.asarray(rng.standard_normal((B, L, D)), dtype)
         if with_gate else None
     )
-    want = np.asarray(get_conv_backend("direct")(u, h, skip, gate))
+    want = np.asarray(get_conv_backend("direct")(u, h, skip, gate),
+                      np.float32)
     for name, backend in sorted(registered_conv_backends().items()):
         if backend.max_len and L > backend.max_len:
             continue
-        got = np.asarray(backend(u, h, skip, gate))
+        got = np.asarray(backend(u, h, skip, gate), np.float32)
         np.testing.assert_allclose(
-            got, want, rtol=5e-3, atol=5e-3,
+            got, want, rtol=tol, atol=tol,
             err_msg=f"backend '{name}' diverges at (B={B}, L={L}, D={D}, "
-            f"seed={seed}, skip={with_skip}, gate={with_gate})",
+            f"seed={seed}, skip={with_skip}, gate={with_gate}, "
+            f"dtype={jnp.dtype(dtype).name})",
         )
         if with_gate:
             # fused == gate * unfused, per backend (not just vs the oracle)
-            two_pass = np.asarray(gate * backend(u, h, skip))
+            two_pass = np.asarray(gate * backend(u, h, skip), np.float32)
             np.testing.assert_allclose(
-                got, two_pass, rtol=5e-3, atol=5e-3,
+                got, two_pass, rtol=tol, atol=tol,
                 err_msg=f"backend '{name}' gated fusion diverges from its "
                 f"own two-pass schedule at (B={B}, L={L}, D={D}, "
-                f"seed={seed}, skip={with_skip})",
+                f"seed={seed}, skip={with_skip}, "
+                f"dtype={jnp.dtype(dtype).name})",
             )
 
 
@@ -102,6 +109,17 @@ def test_conv_backends_gated_parity_fast(L):
     """Fast-tier pin of the gated-parity property (odd, straddle, prime,
     and exact-block lengths)."""
     _run_all_backends(2, L, 4, seed=1000 + L, with_skip=True, with_gate=True)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("L", [13, 37, 100])
+def test_conv_backends_gated_parity_dtypes(L, dtype):
+    """Gated-parity grid across dtypes × odd/prime lengths (D=5 so every
+    tiled backend sees a padded channel tail).  The bf16 rows pin the §7
+    downcast-then-gate policy for every backend, including the two-level
+    overlapped registration."""
+    _run_all_backends(2, L, 5, seed=31 * L, with_skip=True, with_gate=True,
+                      dtype=getattr(jnp, dtype))
 
 
 def test_fft_sp_registered_with_contract():
@@ -188,4 +206,56 @@ def test_toeplitz_pallas_gated_tail_blocks(B, L, D, C, bd):
     want = ref.toeplitz_conv(u, h, skip, gate)
     np.testing.assert_allclose(
         np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_blockfft_overlap_registered_with_contract():
+    """The overlapped two-level conv is a first-class registry citizen:
+    gate fused at the kernel's finalize (DESIGN.md §14), never the oracle,
+    and requires_pallas=False — off-TPU it degrades to the identical
+    blockfft math, so every CPU sweep above exercises the real registered
+    entry point."""
+    b = get_conv_backend("blockfft_overlap")
+    assert b.supports_gate and not b.oracle and not b.requires_pallas
+    assert b.tag == "twolevel_overlap"
+
+
+@pytest.mark.parametrize(
+    "B,L,D,bd,ov",
+    [(2, 100, 5, 4, 2), (1, 37, 3, 2, 4), (2, 64, 4, 4, 2)],
+)
+def test_twolevel_pallas_gated_tail_blocks(B, L, D, bd, ov):
+    """The overlapped two-level kernel BODY (interpret mode, not the CPU
+    degrade path) on shapes whose D pads up to the channel tile: the
+    spectrum accumulation across overlap chunks, the VMEM finalize, and
+    the gate/skip BlockSpecs must all track the padded tail blocks."""
+    from repro.core.blockfft import factor_candidates
+    from repro.core.fftconv import next_fast_len
+    from repro.kernels.twolevel_fft import twolevel_fft_conv
+
+    N = next_fast_len(2 * L - 1)
+    factors = factor_candidates(N, limit=2)[0]
+    rng = np.random.default_rng(L * 7 + D)
+    u = jnp.asarray(rng.standard_normal((B, L, D)), jnp.float32)
+    h = jnp.asarray(rng.standard_normal((D, L)) / L, jnp.float32)
+    skip = jnp.asarray(rng.standard_normal((D,)), jnp.float32)
+    gate = jnp.asarray(rng.standard_normal((B, L, D)), jnp.float32)
+    want = np.asarray(get_conv_backend("direct")(u, h, skip, gate))
+    got = twolevel_fft_conv(
+        u, h, skip, gate, factors=factors, block_d=bd, overlap=ov,
+        interpret=True,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), want, rtol=2e-4, atol=2e-4,
+        err_msg=f"gated twolevel kernel (factors={factors})",
+    )
+    # ungated + skipless: the dummy gate row / zero skip paths
+    want0 = np.asarray(get_conv_backend("direct")(u, h, None, None))
+    got0 = twolevel_fft_conv(
+        u, h, None, None, factors=factors, block_d=bd, overlap=ov,
+        interpret=True,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got0), want0, rtol=2e-4, atol=2e-4,
+        err_msg=f"ungated twolevel kernel (factors={factors})",
     )

@@ -244,6 +244,74 @@ def test_cp_train_step_matches_single_device_per_mixer():
     assert "MIXERS-OK" in out
 
 
+def test_cp_train_step_multihybrid_se_mr_li_attn():
+    """ISSUE 9 acceptance row: the 4-way SE-MR-LI-attn multi-hybrid
+    pattern (DESIGN.md §14) trains under cp_axis with loss AND grads
+    matching the single-device step — SE's fp32 FIR, MR's fixed-support
+    taps through the cp conv backend, LI's fft_sp VJP, and ring attention
+    all in ONE network.  remat=True like the per-mixer hyena row: the
+    checkpoint boundary keeps the partitioner honoring the filter FFN's
+    seq-sharding constraints."""
+    out = run_subprocess("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.base import ModelConfig
+        from repro.common.policy import FP32
+        from repro.train import optim as O
+        from repro.train import trainer as T
+
+        cfg = ModelConfig(
+            name="cp-mh", family="test",
+            n_layers=4, d_model=32, n_heads=4, n_kv_heads=2, head_dim=8,
+            d_ff=64, vocab_size=64,
+            pattern=("hyena_se", "hyena_mr", "hyena_li", "attention"),
+            local_window=8, ssm_state=16, ssd_head_dim=16, rnn_width=32,
+            hyena_filter_width=16, hyena_pos_dim=9,
+            hyena_se_len=4, hyena_mr_support=8,
+        )
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        B, L = 8, 32
+        tok = jax.random.randint(jax.random.PRNGKey(1), (B, L), 0, 64)
+        lab = jax.random.randint(jax.random.PRNGKey(2), (B, L), 0, 64)
+        batch = {"tokens": tok, "labels": lab}
+        tcfg1 = T.TrainConfig(
+            optimizer=O.AdamWConfig(lr=1e-3, warmup_steps=0),
+            remat=True, policy=FP32)
+        tcfg2 = dataclasses.replace(tcfg1, cp_axis="model")
+        state, axes = T.init_train_state(jax.random.PRNGKey(0), cfg)
+        params = state["params"]
+
+        ctx1 = tcfg1.apply_context()
+        (l1, _), g1 = jax.value_and_grad(
+            lambda p, b: T._loss(p, cfg, tcfg1, ctx1, b),
+            has_aux=True)(params, batch)
+
+        ectx = tcfg2.apply_context(mesh=mesh)
+        p2 = jax.device_put(params, ectx.param_shardings(axes, params))
+        b2 = {k: jax.device_put(
+                  v, ectx.data_sharding(v.ndim, v.shape[0], v.shape[1]))
+              for k, v in batch.items()}
+        ctx2 = tcfg2.apply_context()
+        with ectx.scope():
+            (l2, _), g2 = jax.jit(jax.value_and_grad(
+                lambda p, b: T._loss(p, cfg, tcfg2, ctx2, b),
+                has_aux=True))(p2, b2)
+            l2 = float(l2)
+        dl = abs(float(l1) - l2)
+        worst = 0.0
+        for a, b in zip(jax.tree_util.tree_leaves(g1),
+                        jax.tree_util.tree_leaves(g2)):
+            a = np.asarray(a, np.float32)
+            b = np.asarray(jax.device_get(b), np.float32)
+            scale = max(np.abs(a).max(), 1e-6)
+            worst = max(worst, np.abs(a - b).max() / scale)
+        assert dl < 1e-4, f"dloss={dl:.2e}"
+        assert worst < 1e-3, f"grad_rel={worst:.2e}"
+        print(f"MH-OK dloss={dl:.2e} grad_rel={worst:.2e}")
+    """)
+    assert "MH-OK" in out
+
+
 def test_cp_full_train_step_runs_and_composes():
     """End-to-end make_train_step under cp: optimizer update, microbatches,
     and in-step halo-exchanged targets (no labels in the batch), finite

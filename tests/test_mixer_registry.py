@@ -25,7 +25,10 @@ from repro.models.mixer_api import (
     registered_mixers,
 )
 
-BUILTIN_MIXERS = ("attention", "local_attention", "hyena", "ssd", "rglru")
+BUILTIN_MIXERS = (
+    "attention", "local_attention", "hyena", "ssd", "rglru",
+    "hyena_se", "hyena_mr", "hyena_li",
+)
 
 
 def small_cfg(mixer: str) -> ModelConfig:
@@ -36,6 +39,7 @@ def small_cfg(mixer: str) -> ModelConfig:
         d_ff=64, vocab_size=64, pattern=(mixer,), local_window=8,
         ssm_state=16, ssd_head_dim=16, rnn_width=32,
         hyena_filter_width=16, hyena_pos_dim=9,
+        hyena_se_len=4, hyena_mr_support=8,
     )
 
 
@@ -402,8 +406,15 @@ def test_resolve_conv_backend_env_and_override(monkeypatch):
     assert resolve_conv_backend() == "blockfft"
     assert resolve_conv_backend("direct") == "direct"  # override beats env
     monkeypatch.setenv("REPRO_CONV_BACKEND", "cufft")
-    with pytest.raises(ValueError, match="registered"):
+    # the error names the bad backend, where it came from, and the sorted
+    # registered list — a typo'd env var is diagnosable from the message
+    with pytest.raises(
+        ValueError,
+        match=r"unknown conv backend 'cufft' \(from \$REPRO_CONV_BACKEND\)",
+    ):
         resolve_conv_backend()
+    with pytest.raises(ValueError, match="blockfft_overlap"):
+        resolve_conv_backend("no-such-backend")
 
 
 def test_backend_length_constraint():

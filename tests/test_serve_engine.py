@@ -31,6 +31,7 @@ HARNESS_ARCHS = [
     "recurrentgemma-2b",  # rglru + local_attention (+ tail)
     "hyena-153m",         # hyena
     "mamba2-130m",        # ssd
+    "hyena-mh-small",     # hyena_se + hyena_mr + hyena_li + attention
 ]
 
 MAX_LEN = 24
@@ -143,6 +144,14 @@ def test_schedule_smoke_deterministic():
     """Fast-tier pin: one fixed mixed schedule with eviction, all archs'
     cheapest member (hyena), token-identical to the reference."""
     run_schedule("hyena-153m", np.random.default_rng(1234))
+
+
+def test_schedule_smoke_multihybrid():
+    """Fast-tier pin (ISSUE 9 acceptance): the SE-MR-LI-attn multi-hybrid
+    pattern — three hyena tiers with distinct cache layouts plus attention
+    in ONE network — serves token-identically through the dense engine on
+    a fixed mixed schedule with eviction."""
+    run_schedule("hyena-mh-small", np.random.default_rng(77))
 
 
 def test_decode_quantum_token_identical():
@@ -263,6 +272,14 @@ def test_paged_schedule_fixed_seed():
     chunked prefill, eviction + radix chaos) on hyena, tie-aware
     token-identical to the sequential reference."""
     serve_parity.check_paged_schedule("hyena-153m", 1234)
+
+
+def test_paged_schedule_fixed_seed_multihybrid():
+    """Fast-tier pin (ISSUE 9 acceptance): the SE-MR-LI-attn multi-hybrid
+    through the PAGED engine — SE/MR rolling windows are pinned state, LI
+    operand history is paged, attention KV is paged — one fixed randomized
+    paged schedule, tie-aware token-identical to the reference."""
+    serve_parity.check_paged_schedule("hyena-mh-small", 77)
 
 
 def _make_paged_harness(arch):
