@@ -14,9 +14,28 @@ Two measured rows plus one analysis row:
     peak (temp) bytes the cp run avoids.  At real lengths this is the
     configuration that OOMs; here it documents the ratio.
 
+Plus the reversible-substrate pair (DESIGN.md §15), lowered-only at a
+deeper stack (``--rev-depth``, default 16 — the regime where depth-resident
+activations dominate):
+
+  * ``train/standard_deep``   — remat'd single-stream scan at depth D.
+  * ``train/reversible_deep`` — the same model with ``reversible=True``:
+    the coupling custom_vjp's residuals are O(1) in depth, so
+    ``peak_bytes`` must come out *below* the standard row (asserted by the
+    CI fast tier), and ``compile_s`` records what the reconstruct-and-
+    recompute backward costs at trace/compile time.
+
+The deep pair uses its own ``--rev-pattern`` (default ``hyena``, the
+paper's operator): attention rows would dominate the peak with
+depth-independent L^2 score temps and mask the depth-resident carry the
+pair exists to measure; hyena's O(L log L) FFT temps keep it visible
+(standard grows linearly in depth, reversible stays flat).
+
 Peak-memory numbers come from ``compiled.memory_analysis()`` (XLA's
-buffer-assignment peak; ``temp_size_in_bytes``).  CPU-to-CPU comparable
-only — rerun on TPU for real numbers, like the other BENCH artifacts.
+buffer-assignment peak; ``temp_size_in_bytes``); every row also carries
+``compile_s`` (wall seconds for ``lowered.compile()``).  CPU-to-CPU
+comparable only — rerun on TPU for real numbers, like the other BENCH
+artifacts.
 
     PYTHONPATH=src python benchmarks/bench_train.py --json BENCH_train.json
 """
@@ -41,6 +60,12 @@ def main() -> None:
                     help="comma-separated mixer pattern")
     ap.add_argument("--steps", type=int, default=3,
                     help="timed steps after the compile step")
+    ap.add_argument("--rev-depth", type=int, default=16,
+                    help="layer count for the reversible-vs-standard pair")
+    ap.add_argument("--rev-seq-len", type=int, default=2048,
+                    help="sequence length for the reversible-vs-standard pair")
+    ap.add_argument("--rev-pattern", default="hyena",
+                    help="mixer pattern for the reversible-vs-standard pair")
     ap.add_argument("--json", default=None, metavar="PATH")
     args = ap.parse_args()
 
@@ -73,11 +98,12 @@ def main() -> None:
     rows = []
     errors = []
 
-    def run_case(name, tcfg, L, mesh=None, execute=True):
+    def run_case(name, tcfg, L, mesh=None, execute=True, model_cfg=None):
+        mcfg = model_cfg or cfg
         ectx = tcfg.apply_context(mesh=mesh)
-        state, axes = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+        state, axes = init_train_state(jax.random.PRNGKey(0), mcfg, tcfg)
         tokens = jax.random.randint(
-            jax.random.PRNGKey(1), (args.batch, L), 0, cfg.vocab_size
+            jax.random.PRNGKey(1), (args.batch, L), 0, mcfg.vocab_size
         )
         # no labels on purpose: exercises the in-step halo-exchanged
         # next-token targets under cp
@@ -90,16 +116,19 @@ def main() -> None:
                 )
                 for k, v in batch.items()
             }
-        step = jax.jit(make_train_step(cfg, tcfg))
+        step = jax.jit(make_train_step(mcfg, tcfg))
         with ectx.scope():
             lowered = step.lower(state, batch)
+            tc0 = time.perf_counter()
             compiled = lowered.compile()
+            compile_s = time.perf_counter() - tc0
             mem = compiled.memory_analysis()
             peak = int(getattr(mem, "temp_size_in_bytes", 0)) if mem else None
             if not execute:
                 return {
                     "name": name, "seq_len": L, "cp": P_sz if mesh else 1,
-                    "tok_s": None, "peak_bytes": peak, "executed": False,
+                    "tok_s": None, "peak_bytes": peak,
+                    "compile_s": round(compile_s, 3), "executed": False,
                 }
             state, m = compiled(state, batch)  # compile+warm
             jax.block_until_ready(m["loss"])
@@ -112,7 +141,8 @@ def main() -> None:
         return {
             "name": name, "seq_len": L, "cp": P_sz if mesh else 1,
             "tok_s": toks / dt, "step_ms": dt * 1e3,
-            "peak_bytes": peak, "loss": float(m["loss"]), "executed": True,
+            "peak_bytes": peak, "compile_s": round(compile_s, 3),
+            "loss": float(m["loss"]), "executed": True,
         }
 
     base = TrainConfig(optimizer=opt, remat=False, policy=FP32)
@@ -135,6 +165,27 @@ def main() -> None:
     except Exception as e:  # pragma: no cover
         errors.append(f"train/unsharded_at_cpP_len: {e!r}")
 
+    # reversible-vs-standard at depth where activations dominate: lowered
+    # only (the numbers of record are peak temp bytes + compile seconds)
+    deep_cfg = dataclasses.replace(
+        cfg, n_layers=args.rev_depth,
+        pattern=tuple(args.rev_pattern.split(",")),
+    )
+    std_deep = TrainConfig(optimizer=opt, remat=True, policy=FP32)
+    rev_deep = dataclasses.replace(std_deep, reversible=True)
+    try:
+        rows.append(run_case("train/standard_deep", std_deep,
+                             args.rev_seq_len, execute=False,
+                             model_cfg=deep_cfg))
+    except Exception as e:  # pragma: no cover
+        errors.append(f"train/standard_deep: {e!r}")
+    try:
+        rows.append(run_case("train/reversible_deep", rev_deep,
+                             args.rev_seq_len, execute=False,
+                             model_cfg=deep_cfg))
+    except Exception as e:  # pragma: no cover
+        errors.append(f"train/reversible_deep: {e!r}")
+
     for r in rows:
         tok = "-" if r["tok_s"] is None else f"{r['tok_s']:12.0f}"
         pk = "-" if r["peak_bytes"] is None else f"{r['peak_bytes']:>14d}"
@@ -144,6 +195,15 @@ def main() -> None:
         # schema 2: one scalar headline (the executed context-parallel
         # step's throughput) for perf-trajectory tooling
         cpP = next((r for r in rows if r["name"] == "train/cpP"), None)
+        std = next((r for r in rows if r["name"] == "train/standard_deep"),
+                   None)
+        rev = next((r for r in rows if r["name"] == "train/reversible_deep"),
+                   None)
+        rev_ratio = (
+            None if not (std and rev and std.get("peak_bytes")
+                         and rev.get("peak_bytes") is not None)
+            else round(rev["peak_bytes"] / std["peak_bytes"], 4)
+        )
         artifact = {
             "schema": 2,
             "summary": {
@@ -155,7 +215,14 @@ def main() -> None:
                     ),
                     "unit": "tok_s",
                 },
+                "reversible": {
+                    "metric": "train/reversible_deep peak over standard",
+                    "value": rev_ratio,
+                    "unit": "peak_bytes_ratio",
+                },
             },
+            "rev_depth": args.rev_depth,
+            "rev_pattern": args.rev_pattern.split(","),
             "device": jax.devices()[0].platform,
             "devices": P_sz,
             "tokens_per_chip": args.tokens_per_chip,

@@ -72,6 +72,23 @@ class ExecutionContext(ApplyContext):
     # mixers run the ring/masked-allgather path, and make_train_step's
     # halo exchange handles shifted-by-one targets (DESIGN.md §12).
     cp_axis: Optional[str] = None
+    # reversible dual-stream training substrate (DESIGN.md §15): the scanned
+    # block groups run as additive couplings whose custom_vjp reconstructs
+    # activations from outputs — O(1) activation memory over the stacked
+    # depth.  Training-only: serve/prefill/decode ignore the flag.  Composes
+    # with cp_axis (both streams carry the same sequence-sharding pins) and
+    # makes remat a no-op over the scanned depth (the custom VJP already
+    # fixes the save set; tail layers still remat normally).
+    reversible: bool = False
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.reversible and self.unroll:
+            raise ValueError(
+                "reversible=True requires the scanned layer loop; "
+                "unroll=True would re-trace every group and defeat the "
+                "O(1)-memory custom_vjp — unset one of the two"
+            )
 
     # ------------------------------------------------------------ precision
     def cast_compute(self, tree):

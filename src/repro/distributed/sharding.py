@@ -17,7 +17,13 @@ is reached through ``ExecutionContext`` (repro.distributed.execution) so
 sharding decisions live in exactly one place.
 
 Activation sharding is *not* rule-driven — step functions place explicit
-``ctx.shard`` constraints (DESIGN.md §6).
+``ctx.shard`` constraints (DESIGN.md §6).  That convention is what lets the
+reversible substrate (DESIGN.md §15) work here unchanged: its dual-stream
+scan carry ``(x1, x2)`` is an activation, pinned to the residual-stream
+layout (Megatron-SP ``model`` or ``cp_axis`` over the sequence dim) by the
+coupling itself on both streams, while the stacked per-group parameter
+trees it scans over are byte-identical to the standard path's — the same
+``train_state_shardings`` output applies whichever way the flag is set.
 """
 from __future__ import annotations
 

@@ -44,7 +44,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
 def _axis_env(axis: str):
@@ -391,6 +391,17 @@ def sp_fft_causal_conv(
     fft_causal_conv in tests (8 host devices).
     """
     B, L, D = u.shape
+    # Pin the taps replicated BEFORE they cross the shard_map boundary.
+    # When h is produced inside the same jit (the implicit-filter FFN),
+    # GSPMD propagates the manual region's P(None, axis) layout back into
+    # the producer and reshards it via "involuntary full rematerialization"
+    # — which, on the filter net's transpose/reshape/iota graph, computes
+    # *wrong values* (observed 0.5 abs error on |h|~0.36 taps, XLA CPU
+    # SPMD; pinning to P(None, axis) still goes through the broken reshard,
+    # only full replication sidesteps it).  The taps are (D, L) and
+    # batch-independent, so replicating them is what the eager path always
+    # did; the shard_map in_spec then splits a *correct* replicated tensor.
+    h = jax.lax.with_sharding_constraint(h, NamedSharding(mesh, P()))
     P_sz = mesh.shape[axis]
     pad = (-L) % P_sz
     if pad:

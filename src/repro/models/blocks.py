@@ -58,32 +58,60 @@ def init_block(key, cfg: ModelConfig, mixer: str) -> Dict[str, Any]:
     return p
 
 
-def apply_block(
+def mixer_branch(
     params, cfg: ModelConfig, mixer: str, x: jax.Array,
     ctx: Optional[ApplyContext] = None,
-) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+) -> jax.Array:
+    """``norm1 → token mixer → layout pin``: the F branch of the block.
+
+    Shared by the standard residual path (:func:`apply_block`) and the
+    reversible dual-stream coupling (:mod:`repro.models.reversible`) so both
+    wirings evaluate the exact same sub-layer math.
+    """
     from repro.distributed.ctx import shard
 
     ctx = ctx or DEFAULT_CONTEXT
     m = get_mixer(mixer)
-    mc = m.make_config(cfg)
     h = apply_norm(params["norm1"], x, cfg.norm)
-    h = m.apply(params["mixer"], mc, h, ctx)
+    h = m.apply(params["mixer"], m.make_config(cfg), h, ctx)
     # pin the sub-layer output to the residual-stream layout *before* the
     # add: row-parallel partial sums then lower to reduce-scatter instead of
     # a full all-reduce (16x fewer bytes at TP=16) — EXPERIMENTS.md §Perf.
     if h.ndim == 3:
         h = shard(h, "data", "model", None)
-    x = x + h
+    return h
+
+
+def channel_branch(
+    params, cfg: ModelConfig, x: jax.Array
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """``norm2 → MLP/MoE → layout pin``: the G branch of the block.
+
+    Returns ``(h, aux)``; ``aux`` carries the MoE load-balance / router
+    z-loss terms (empty dict for dense MLPs).  Callers must only invoke this
+    when :func:`_has_channel_mixer` is true.
+    """
+    from repro.distributed.ctx import shard
+
+    h = apply_norm(params["norm2"], x, cfg.norm)
+    if cfg.moe:
+        h, aux = MOE.apply_moe(params["moe"], _moe_config(cfg), h)
+    else:
+        h = apply_mlp(params["mlp"], h, cfg.mlp)
+        aux = {}
+    if h.ndim == 3:
+        h = shard(h, "data", "model", None)
+    return h, aux
+
+
+def apply_block(
+    params, cfg: ModelConfig, mixer: str, x: jax.Array,
+    ctx: Optional[ApplyContext] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    x = x + mixer_branch(params, cfg, mixer, x, ctx)
     aux: Dict[str, jax.Array] = {}
     if _has_channel_mixer(cfg):
-        h = apply_norm(params["norm2"], x, cfg.norm)
-        if cfg.moe:
-            h, aux = MOE.apply_moe(params["moe"], _moe_config(cfg), h)
-        else:
-            h = apply_mlp(params["mlp"], h, cfg.mlp)
-        if h.ndim == 3:
-            h = shard(h, "data", "model", None)
+        h, aux = channel_branch(params, cfg, x)
         x = x + h
     return x, aux
 

@@ -27,6 +27,13 @@ from repro.models.mixer_api import DEFAULT_CONTEXT, ApplyContext
 
 IGNORE = -1  # label id excluded from the loss
 
+# name → jax.checkpoint policy for the per-group remat of the standard path
+_REMAT_POLICIES = {
+    "nothing": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
 
 def _mesh_scope(ctx: ApplyContext):
     """Honor ``ctx.mesh`` as an override of the ambient mesh: inside the
@@ -129,15 +136,19 @@ def forward(
         x = shard(x, "data", seq_axis, None)
         return x, aux_sum
 
-    body = group_body
-    if ctx.remat:
-        policy = {
-            "nothing": jax.checkpoint_policies.nothing_saveable,
-            "dots": jax.checkpoint_policies.checkpoint_dots,
-            "dots_no_batch": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
-        }[ctx.remat_policy]
-        body = jax.checkpoint(group_body, policy=policy)
-    if ctx.unroll:
+    if getattr(ctx, "reversible", False):
+        # Reversible dual-stream substrate (DESIGN.md §15): the scan-level
+        # custom_vjp reconstructs activations in backward, so remat is
+        # deliberately NOT applied here — the VJP already dictates the
+        # (O(1)-in-depth) save set.  Training-only: prefill/decode below
+        # never consult this flag.
+        from repro.models import reversible as REV
+
+        x, aux_stack = REV.reversible_forward(cfg, ctx, params["groups"], x)
+    elif ctx.unroll:
+        body = group_body
+        if ctx.remat:
+            body = jax.checkpoint(group_body, policy=_REMAT_POLICIES[ctx.remat_policy])
         aux_list = []
         n_groups = cfg.n_layers // len(cfg.pattern)
         for g in range(n_groups):
@@ -146,6 +157,9 @@ def forward(
             aux_list.append(a)
         aux_stack = jnp.stack(aux_list) if aux_list else jnp.zeros((1, 2))
     else:
+        body = group_body
+        if ctx.remat:
+            body = jax.checkpoint(group_body, policy=_REMAT_POLICIES[ctx.remat_policy])
         x, aux_stack = jax.lax.scan(
             lambda carry, gp: body(carry, gp), x, tuple(params["groups"])
         )

@@ -1,0 +1,236 @@
+"""Reversible dual-stream coupling over the scan-stacked depth (DESIGN.md §15).
+
+The standard block is a single-stream residual: ``x += Mixer(norm(x));
+x += MLP(norm(x))``.  Backward through a depth-``N`` stack needs the ``N``
+saved residual streams (or remat re-forwards).  The reversible substrate
+instead threads **two** streams through an additive coupling per block::
+
+    y1 = x1 + F(x2)      F = norm1 → token mixer   (blocks.mixer_branch)
+    y2 = x2 + G(y1)      G = norm2 → MLP / MoE     (blocks.channel_branch)
+
+which is exactly invertible::
+
+    x2 = y2 - G(y1)
+    x1 = y1 - F(x2)
+
+so the backward pass can *reconstruct* every intermediate stream from the
+outputs instead of saving it.  The whole group scan is wrapped in one
+``jax.custom_vjp`` whose residuals are just ``(stacked params, y1, y2)`` —
+wrapping per-group would be useless, since ``lax.scan``'s own AD would
+still save the carry at every step.  The backward pass is a single
+``lax.scan(..., reverse=True)`` that per group (a) inverts the coupling to
+recover the group's input streams and (b) runs ``jax.vjp`` through the
+recomputed group forward, emitting per-group parameter cotangents as scan
+outputs.  Depth-resident activation memory is therefore O(1): two streams
+plus one group's recompute workspace, regardless of ``n_layers``.
+
+Notes:
+
+- This is a **different function** from the standard single-stream stack
+  (the streams diverge after the first block), so "grad parity" means: the
+  custom-VJP backward matches plain autodiff *of the same reversible
+  wiring* (see :func:`reference_vjp`), not the standard path's gradients.
+- Training-only transform: prefill/decode/serve never consult the flag.
+- MoE aux losses survive the coupling: the per-group ``(2,)`` aux vector is
+  a scan output of the forward, and its cotangent rows are replayed into
+  the matching group's recomputed VJP in the backward.
+- Composition: the Megatron-SP / ``cp_axis`` sequence-sharding constraints
+  are pinned on *both* streams at group boundaries (same layout as the
+  standard scan carry); remat is a no-op here — the custom VJP already
+  dictates what is saved, so ``lm.forward`` skips ``jax.checkpoint`` on the
+  reversible path.
+- Exactness: the inverse is algebraically exact but floating-point
+  reconstruction ``(a + b) - b`` rounds, so gradients match autodiff to
+  ~1e-5 rel at fp32.  The dual streams always ride in fp32 while branches
+  compute at the policy dtype (cast at the branch input): under bf16 the
+  reconstructed fp32 stream re-rounds to the bit-identical bf16 branch
+  input, so recompute noise does not compound and bf16 parity is *tighter*
+  than fp32 (exact on CPU; tests/test_reversible.py documents 5e-3).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as B
+from repro.models.mixer_api import DEFAULT_CONTEXT, ApplyContext
+
+
+def _seq_axis(ctx) -> str:
+    return getattr(ctx, "cp_axis", None) or "model"
+
+
+def _pin(ctx, x: jax.Array) -> jax.Array:
+    """Residual-stream layout constraint (both streams, group boundaries)."""
+    from repro.distributed.ctx import shard
+
+    return shard(x, "data", _seq_axis(ctx), None)
+
+
+# ---------------------------------------------------------------- coupling
+
+def coupling_apply(
+    params, cfg: ModelConfig, mixer: str, x1: jax.Array, x2: jax.Array,
+    ctx: Optional[ApplyContext] = None, branch_dtype=None,
+) -> Tuple[jax.Array, jax.Array, Dict[str, jax.Array]]:
+    """One reversible block: ``y1 = x1 + F(x2); y2 = x2 + G(y1)``.
+
+    The streams ride at their own (fp32) dtype; ``branch_dtype`` is the
+    compute dtype the branches see — casting the branch *input* down keeps
+    bf16 compute exactly as fast while the stream adds/subtracts stay fp32,
+    so the backward's reconstructed stream re-rounds to the *identical*
+    branch input and recompute noise does not compound across depth.
+    """
+    ctx = ctx or DEFAULT_CONTEXT
+    bd = branch_dtype or x1.dtype
+    y1 = x1 + B.mixer_branch(params, cfg, mixer, x2.astype(bd), ctx)
+    aux: Dict[str, jax.Array] = {}
+    if B._has_channel_mixer(cfg):
+        h, aux = B.channel_branch(params, cfg, y1.astype(bd))
+        y2 = x2 + h
+    else:
+        y2 = x2
+    return y1, y2, aux
+
+
+def coupling_inverse(
+    params, cfg: ModelConfig, mixer: str, y1: jax.Array, y2: jax.Array,
+    ctx: Optional[ApplyContext] = None, branch_dtype=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Exact inverse of :func:`coupling_apply` (same branch evaluations)."""
+    ctx = ctx or DEFAULT_CONTEXT
+    bd = branch_dtype or y1.dtype
+    if B._has_channel_mixer(cfg):
+        h, _ = B.channel_branch(params, cfg, y1.astype(bd))
+        x2 = y2 - h
+    else:
+        x2 = y2
+    x1 = y1 - B.mixer_branch(params, cfg, mixer, x2.astype(bd), ctx)
+    return x1, x2
+
+
+# ------------------------------------------------------------- group level
+
+def _group_apply(cfg: ModelConfig, ctx, bd, gp, x1, x2):
+    """One pattern group of couplings; returns (y1, y2, aux_sum (2,))."""
+    x1, x2 = _pin(ctx, x1), _pin(ctx, x2)
+    aux_sum = jnp.zeros((2,), jnp.float32)
+    for p, mixer in enumerate(cfg.pattern):
+        x1, x2, aux = coupling_apply(
+            gp[p], cfg, mixer, x1, x2, ctx, branch_dtype=bd
+        )
+        if aux:
+            aux_sum = aux_sum + jnp.stack(
+                [aux["moe_load_balance"], aux["moe_z_loss"]]
+            )
+    return _pin(ctx, x1), _pin(ctx, x2), aux_sum
+
+
+def _group_inverse(cfg: ModelConfig, ctx, bd, gp, y1, y2):
+    y1, y2 = _pin(ctx, y1), _pin(ctx, y2)
+    for p in reversed(range(len(cfg.pattern))):
+        y1, y2 = coupling_inverse(
+            gp[p], cfg, cfg.pattern[p], y1, y2, ctx, branch_dtype=bd
+        )
+    return _pin(ctx, y1), _pin(ctx, y2)
+
+
+# --------------------------------------------------------- scan-level VJP
+
+def _scan_impl(cfg: ModelConfig, ctx, bd, groups, x1, x2):
+    """Plain forward: scan the coupling over the stacked groups."""
+
+    def body(carry, gp):
+        a, b = carry
+        a, b, aux = _group_apply(cfg, ctx, bd, gp, a, b)
+        return (a, b), aux
+
+    (y1, y2), aux_stack = jax.lax.scan(body, (x1, x2), groups)
+    return y1, y2, aux_stack
+
+
+_rev_scan = jax.custom_vjp(_scan_impl, nondiff_argnums=(0, 1, 2))
+
+
+def _rev_fwd(cfg, ctx, bd, groups, x1, x2):
+    y1, y2, aux_stack = _scan_impl(cfg, ctx, bd, groups, x1, x2)
+    # O(1) residuals in depth: params + the two *output* streams only.
+    return (y1, y2, aux_stack), (groups, y1, y2)
+
+
+def _rev_bwd(cfg, ctx, bd, res, cots):
+    groups, y1, y2 = res
+    dy1, dy2, daux = cots
+
+    def body(carry, xs):
+        c_y1, c_y2, c_dy1, c_dy2 = carry
+        gp, daux_g = xs
+        # (a) invert the coupling: recover this group's *input* streams
+        x1, x2 = _group_inverse(cfg, ctx, bd, gp, c_y1, c_y2)
+        x1 = jax.lax.stop_gradient(x1)
+        x2 = jax.lax.stop_gradient(x2)
+        # (b) recompute the group forward under vjp and pull cotangents back
+        _, pullback = jax.vjp(
+            lambda g, a, b: _group_apply(cfg, ctx, bd, g, a, b), gp, x1, x2
+        )
+        dgp, dx1, dx2 = pullback((c_dy1, c_dy2, daux_g))
+        return (x1, x2, dx1, dx2), dgp
+
+    (x1, x2, dx1, dx2), dgroups = jax.lax.scan(
+        body, (y1, y2, dy1, dy2), (groups, daux), reverse=True
+    )
+    return dgroups, dx1, dx2
+
+
+_rev_scan.defvjp(_rev_fwd, _rev_bwd)
+
+
+# tests flip this to compare the custom VJP against plain autodiff of the
+# identical wiring (lax.scan AD saves the carry per step — O(depth) memory,
+# reference semantics)
+_USE_CUSTOM_VJP = True
+
+
+@contextlib.contextmanager
+def reference_vjp():
+    """Within this context, differentiate the reversible wiring with plain
+    autodiff instead of the reconstruct-and-recompute custom VJP."""
+    global _USE_CUSTOM_VJP
+    prev = _USE_CUSTOM_VJP
+    _USE_CUSTOM_VJP = False
+    try:
+        yield
+    finally:
+        _USE_CUSTOM_VJP = prev
+
+
+def reversible_scan(cfg: ModelConfig, ctx, bd, groups, x1, x2):
+    fn = _rev_scan if _USE_CUSTOM_VJP else _scan_impl
+    return fn(cfg, ctx, bd, groups, x1, x2)
+
+
+# ------------------------------------------------------------- entry point
+
+def reversible_forward(
+    cfg: ModelConfig, ctx, groups, x: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Residual stream → dual streams → reversible scan → combined stream.
+
+    Streams initialize as ``x1 = x2 = x`` and recombine as the mean, so a
+    zero-depth stack is the identity and the output scale matches the
+    single-stream convention.  The streams themselves ride in fp32 — the
+    reconstruction ``(a + b) - b`` must not round at the compute dtype, or
+    bf16 training would see ~eps·(inverse-chain gain) gradient noise —
+    while every branch computes at the incoming (policy) dtype.  Returns
+    ``(x_out, aux_stack (n_groups, 2))`` with ``x_out`` back at ``x.dtype``.
+    """
+    x = _pin(ctx, x)
+    bd = x.dtype  # the policy's compute dtype: what the branches see
+    x32 = x.astype(jnp.float32)
+    y1, y2, aux_stack = reversible_scan(cfg, ctx, bd, tuple(groups), x32, x32)
+    out = ((y1 + y2) * 0.5).astype(bd)
+    return _pin(ctx, out), aux_stack

@@ -48,6 +48,11 @@ class TrainConfig:
     # context-parallel training: shard the batch's sequence dim (and the
     # residual stream) over this mesh axis; None = off.  See DESIGN.md §12.
     cp_axis: Optional[str] = None
+    # reversible dual-stream substrate: O(1) activation memory over the
+    # scanned depth via the coupling custom_vjp (DESIGN.md §15).  Parameter
+    # and optimizer trees are identical either way, so checkpoints restore
+    # across a flag flip bit-for-bit.  Training-only — serving ignores it.
+    reversible: bool = False
 
     def __post_init__(self):
         if self.grad_compression not in (None, "int8_ef"):
@@ -70,6 +75,7 @@ class TrainConfig:
             policy=self.policy,
             fsdp=self.fsdp,
             cp_axis=self.cp_axis,
+            reversible=self.reversible,
         )
 
 

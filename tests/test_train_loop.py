@@ -233,11 +233,12 @@ from repro.train.loop import LoopConfig, TrainLoop
 from repro.train.trainer import TrainConfig
 
 ckpt_dir, hist_path, delay = sys.argv[1], sys.argv[2], float(sys.argv[3])
+reversible = sys.argv[4] == "1"
 cfg = dataclasses.replace(get_config("hyena-153m").reduced(),
                           vocab_size=32, n_layers=2, d_model=64)
 tcfg = TrainConfig(optimizer=O.AdamWConfig(lr=1e-3, warmup_steps=0,
                                            total_steps=20),
-                   remat=False)
+                   remat=False, reversible=reversible)
 lcfg = LoopConfig(total_steps=20, ckpt_dir=ckpt_dir, ckpt_every=2,
                   log_every=999, heartbeat_interval=None)
 corpus = np.arange(20_000, dtype=np.int32) % 31
@@ -255,23 +256,28 @@ print("EXIT", res.status, flush=True)
 """
 
 
-def _spawn_child(ckpt_dir, hist_path, delay):
+def _spawn_child(ckpt_dir, hist_path, delay, reversible=False):
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
     env["JAX_PLATFORMS"] = "cpu"
     return subprocess.Popen(
-        [sys.executable, "-c", _CHILD, ckpt_dir, hist_path, str(delay)],
+        [sys.executable, "-c", _CHILD, ckpt_dir, hist_path, str(delay),
+         "1" if reversible else "0"],
         stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True, env=env,
     )
 
 
 @pytest.mark.slow
-def test_sigterm_kill_and_resume_matches_uninterrupted(tmp_path):
+@pytest.mark.parametrize("reversible", [False, True])
+def test_sigterm_kill_and_resume_matches_uninterrupted(tmp_path, reversible):
     """The real thing: SIGTERM a training process mid-run; it drains to a
     committed checkpoint and exits 0; a restarted process resumes and the
-    combined loss trajectory is identical to a never-killed run."""
+    combined loss trajectory is identical to a never-killed run.  Runs
+    under both block substrates — the reversible dual-stream coupling
+    checkpoints the same state tree, so kill/resume must be equally
+    bit-stable with the flag on (DESIGN.md §15)."""
     ref_hist = str(tmp_path / "ref.json")
-    proc = _spawn_child(str(tmp_path / "ck_ref"), ref_hist, 0.0)
+    proc = _spawn_child(str(tmp_path / "ck_ref"), ref_hist, 0.0, reversible)
     out, err = proc.communicate(timeout=600)
     assert proc.returncode == 0, err[-3000:]
     ref = json.load(open(ref_hist))
@@ -279,7 +285,7 @@ def test_sigterm_kill_and_resume_matches_uninterrupted(tmp_path):
 
     kill_hist = str(tmp_path / "k1.json")
     ck = str(tmp_path / "ck_kill")
-    proc = _spawn_child(ck, kill_hist, 0.3)
+    proc = _spawn_child(ck, kill_hist, 0.3, reversible)
     deadline = time.time() + 300
     seen = 0
     for line in proc.stdout:
@@ -296,7 +302,7 @@ def test_sigterm_kill_and_resume_matches_uninterrupted(tmp_path):
     assert 0 < first["step"] < 20
 
     resume_hist = str(tmp_path / "k2.json")
-    proc = _spawn_child(ck, resume_hist, 0.0)
+    proc = _spawn_child(ck, resume_hist, 0.0, reversible)
     out, err = proc.communicate(timeout=600)
     assert proc.returncode == 0, err[-3000:]
     second = json.load(open(resume_hist))
